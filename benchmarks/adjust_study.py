@@ -1,0 +1,41 @@
+"""Fig 16: the Adjust SMO study — throughput with/without adjustment and
+under different alpha/beta settings, on the hard (osm) dataset."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.workloads import make_dataset, run_workload
+
+from .common import SCALE_N, make_index, print_table, save_results, \
+    scaled_geometry
+
+SETTINGS = [("default", dict(alpha=0.05, beta=1.2)),
+            ("aggressive", dict(alpha=0.0025, beta=1.07)),
+            ("loose", dict(alpha=0.4, beta=2.0)),
+            ("off", dict(alpha=1e9, beta=1e9))]
+
+
+def run(scale: str = "small", n_queries: int = 6_000) -> list[dict]:
+    n = SCALE_N[scale]
+    keys = make_dataset("osm", n)
+    rows = []
+    with scaled_geometry():
+        for wl in ("w3_write", "w5_balanced", "w6_write_heavy"):
+            for sname, kw in SETTINGS:
+                idx = make_index("aulid", **kw)
+                r = run_workload(idx, wl, keys, "osm", n_queries=n_queries)
+                rows.append({"figure": "Fig 16", "workload": wl,
+                             "setting": sname,
+                             "throughput": round(r.throughput),
+                             "blocks_per_op": round(r.blocks_per_op, 2),
+                             "adjusts": idx.smo_adjusts,
+                             "inner_height": idx.inner_height()})
+    save_results("adjust_study", rows, {"scale": scale, "dataset": "osm"})
+    print_table(f"Fig 16 — Adjust study on osm (N={n})", rows,
+                ["workload", "setting", "throughput", "blocks_per_op",
+                 "adjusts", "inner_height"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Figs 8/9: bulkload time + on-disk index size (after build and after the
+write workloads)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.workloads import make_dataset, payloads_for, run_workload
+
+from .common import (DATASETS, INDEXES, SCALE_N, make_index, print_table,
+                     save_results, scaled_geometry)
+
+
+def run(scale: str = "small") -> list[dict]:
+    n = SCALE_N[scale]
+    rows = []
+    with scaled_geometry():
+        for dataset in DATASETS:
+            keys = make_dataset(dataset, n)
+            pays = payloads_for(keys)
+            for name in INDEXES:
+                idx = make_index(name)
+                t0 = time.perf_counter()
+                idx.bulkload(keys, pays)
+                dt = time.perf_counter() - t0
+                rows.append({"figure": "Fig 8", "dataset": dataset,
+                             "index": name,
+                             "bulkload_s": round(dt, 3),
+                             "storage_mb": round(idx.storage_bytes / 1e6, 2)})
+            # Fig 9: storage after the balanced write workload
+            for name in INDEXES:
+                idx = make_index(name)
+                r = run_workload(idx, "w5_balanced", keys, dataset,
+                                 n_queries=2_000)
+                rows.append({"figure": "Fig 9", "dataset": dataset,
+                             "index": name, "bulkload_s": None,
+                             "storage_mb": round(r.storage_bytes / 1e6, 2)})
+    save_results("bulkload", rows, {"scale": scale, "n_keys": n})
+    print_table(f"Fig 8 — bulkload time & size (N={n})",
+                [r for r in rows if r["figure"] == "Fig 8"],
+                ["dataset", "index", "bulkload_s", "storage_mb"])
+    print_table("Fig 9 — storage after W5 (balanced)",
+                [r for r in rows if r["figure"] == "Fig 9"],
+                ["dataset", "index", "storage_mb"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

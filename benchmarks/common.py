@@ -1,0 +1,98 @@
+"""Shared benchmark harness: geometry scaling, index registry, reporting.
+
+Scale note (DESIGN.md §8): the paper runs 200M-800M keys on a 1 TB HDD; this
+container is one CPU core. The hardware-independent metric — fetched blocks
+per query — depends on the TREE-HEIGHT REGIME, i.e. on N relative to block
+fanout. ``scaled_geometry`` shrinks every index's block to 512 B (leaf 32
+pairs, B+-tree fanout 31), which puts N=200k keys in the same 4-level
+B+-tree regime as the paper's 200M keys at 4 KB — so the per-query block
+counts and the relative ranks reproduce at 1000x less CPU time. Wall-clock
+throughput is also reported but is a CPU-simulation number.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import Aulid, AulidConfig, BlockDevice
+from repro.core.baselines import alex as _alex
+from repro.core.baselines import btree as _btree
+from repro.core.baselines import fiting as _fiting
+from repro.core.baselines import lipp as _lipp
+from repro.core.baselines import pgm as _pgm
+from repro.core.baselines import (AlexIndex, BPlusTree, FITingTree, LippIndex,
+                                  PGMIndex)
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+BLOCK_BYTES = 512           # scaled geometry (see module docstring)
+SCALE_N = {"small": 60_000, "paper": 200_000, "large": 800_000}
+
+
+def scaled_aulid_config(**kw) -> AulidConfig:
+    return AulidConfig(block_bytes=BLOCK_BYTES, leaf_capacity=32,
+                       mixed_slots_per_block=16, pa_classes=(4, 8, 16),
+                       bt_max_children=4, bt_child_capacity=7, **kw)
+
+
+@contextlib.contextmanager
+def scaled_geometry():
+    """Patch every index's block geometry to 512 B for the duration."""
+    saved = [(_btree, "LEAF_CAP", _btree.LEAF_CAP),
+             (_btree, "INNER_CAP", _btree.INNER_CAP),
+             (_alex, "DATA_PER_BLOCK", _alex.DATA_PER_BLOCK),
+             (_alex, "MAX_NODE_KEYS", _alex.MAX_NODE_KEYS),
+             (_alex, "MIN_CAP", _alex.MIN_CAP),
+             (_fiting, "DATA_PER_BLOCK", _fiting.DATA_PER_BLOCK),
+             (_pgm, "DATA_PER_BLOCK", getattr(_pgm, "DATA_PER_BLOCK", 256)),
+             (_lipp, "SLOTS_PER_BLOCK", _lipp.SLOTS_PER_BLOCK)]
+    try:
+        _btree.LEAF_CAP, _btree.INNER_CAP = 32, 31
+        _alex.DATA_PER_BLOCK, _alex.MAX_NODE_KEYS, _alex.MIN_CAP = 32, 512, 32
+        _fiting.DATA_PER_BLOCK = 32
+        if hasattr(_pgm, "DATA_PER_BLOCK"):
+            _pgm.DATA_PER_BLOCK = 32
+        _lipp.SLOTS_PER_BLOCK = 32
+        yield
+    finally:
+        for mod, name, val in saved:
+            if hasattr(mod, name):
+                setattr(mod, name, val)
+
+
+def make_index(name: str, **kw):
+    dev = BlockDevice(block_bytes=BLOCK_BYTES)
+    if name == "aulid":
+        return Aulid(dev, cfg=scaled_aulid_config(**kw))
+    if name == "lipp-b+":
+        return Aulid(dev, cfg=scaled_aulid_config(lipp_inner=True, **kw))
+    cls = {"btree": BPlusTree, "pgm": PGMIndex, "fiting": FITingTree,
+           "alex": AlexIndex, "lipp": LippIndex}[name]
+    return cls(dev)
+
+
+INDEXES = ["aulid", "fiting", "pgm", "btree", "alex", "lipp"]
+DATASETS = ["covid", "planet", "genome", "osm"]
+
+
+def save_results(name: str, rows: list[dict], meta: dict | None = None):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = {"benchmark": name, "meta": meta or {},
+           "generated": time.strftime("%Y-%m-%d %H:%M:%S"), "rows": rows}
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]):
+    print(f"\n## {title}")
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    print("  " + "  ".join(c.rjust(widths[c]) for c in cols))
+    for r in rows:
+        print("  " + "  ".join(str(r.get(c, "")).rjust(widths[c])
+                               for c in cols))

@@ -1,0 +1,50 @@
+"""Table 3: extra fetched blocks under the Fulfill / ScanFward read
+optimizations (Lookup-Only)."""
+from __future__ import annotations
+
+from repro.core.workloads import make_dataset, run_workload
+
+from .common import DATASETS, SCALE_N, make_index, print_table, save_results, \
+    scaled_geometry
+
+VARIANTS = {
+    "w/o Opt.": dict(scanfward=False, fulfill=False),
+    "Fulfill": dict(scanfward=False, fulfill=True),
+    "ScanFward": dict(scanfward=True, fulfill=False),
+    "Fulfill & ScanFward": dict(scanfward=True, fulfill=True),
+}
+
+
+def run(scale: str = "small", n_queries: int = 4_000) -> list[dict]:
+    n = SCALE_N[scale]
+    rows = []
+    with scaled_geometry():
+        for dataset in DATASETS:
+            keys = make_dataset(dataset, n)
+            base_reads = None
+            for vname, kw in VARIANTS.items():
+                idx = make_index("aulid", **kw)
+                r = run_workload(idx, "w1_lookup", keys, dataset,
+                                 n_queries=n_queries)
+                if vname == "Fulfill & ScanFward":
+                    pass
+                reads = r.reads_per_op
+                rows.append({"table": "Table 3", "dataset": dataset,
+                             "variant": vname,
+                             "reads_per_op": round(reads, 3)})
+            # extra blocks relative to the best variant (the paper's metric)
+            best = min(r["reads_per_op"] for r in rows
+                       if r["dataset"] == dataset)
+            for r in rows:
+                if r["dataset"] == dataset:
+                    r["extra_per_1k"] = round(
+                        (r["reads_per_op"] - best) * 1_000, 1)
+    save_results("design_read_opts", rows, {"scale": scale})
+    print_table(f"Table 3 — read optimizations (N={n}; extra fetched blocks "
+                "per 1000 queries vs best)", rows,
+                ["dataset", "variant", "reads_per_op", "extra_per_1k"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Tables 2/4/5/6: AULID vs LIPP-B+ — the packed-array / two-layer-B+-tree
+inner-node design, on lookups, writes, and the append-only hot-region case."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.workloads import make_dataset, run_workload
+
+from .common import DATASETS, SCALE_N, make_index, print_table, save_results, \
+    scaled_geometry
+
+
+def run(scale: str = "small", n_queries: int = 4_000) -> list[dict]:
+    n = SCALE_N[scale]
+    rows = []
+    with scaled_geometry():
+        for dataset in DATASETS:
+            keys = make_dataset(dataset, n)
+            for name in ("aulid", "lipp-b+"):
+                r1 = run_workload(make_index(name), "w1_lookup", keys,
+                                  dataset, n_queries=n_queries)
+                r3 = run_workload(make_index(name), "w3_write", keys,
+                                  dataset, n_queries=n_queries)
+                ra = run_workload(make_index(name), "append_only", keys,
+                                  dataset, n_queries=n_queries)
+                idx = make_index(name)
+                idx.bulkload(keys, keys + np.uint64(1))
+                rows.append({
+                    "dataset": dataset, "index": name,
+                    "t2_lookup_thpt": round(r1.throughput),
+                    "t2_lookup_blocks": round(r1.reads_per_op, 2),
+                    "t5_write_thpt": round(r3.throughput),
+                    "t5_write_blocks": round(r3.blocks_per_op, 2),
+                    "t6_append_thpt": round(ra.throughput),
+                    "t4_avg_height": round(idx.avg_data_slot_height(), 2),
+                    "t4_storage_mb": round(idx.storage_bytes / 1e6, 2),
+                })
+    save_results("design_structures", rows, {"scale": scale})
+    print_table(f"Tables 2/4/5/6 — AULID vs LIPP-B+ (N={n})", rows,
+                ["dataset", "index", "t2_lookup_thpt", "t2_lookup_blocks",
+                 "t5_write_thpt", "t5_write_blocks", "t6_append_thpt",
+                 "t4_avg_height", "t4_storage_mb"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""TPU-adaptation benchmark (ours): batched device-mirror lookups and the
+Pallas kernel path vs the host pointer-chasing path — the throughput story
+of DESIGN.md §2 (validated in interpret mode on CPU; the structure, not the
+wall-clock, is the TPU artifact)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Aulid
+from repro.core.device_index import build_device_index
+from repro.core.workloads import make_dataset, payloads_for
+
+from .common import SCALE_N, print_table, save_results
+
+
+def run(scale: str = "small", batch: int = 4_096) -> list[dict]:
+    n = SCALE_N[scale]
+    rows = []
+    for dataset in ("covid", "osm"):
+        keys = make_dataset(dataset, n)
+        idx = Aulid()
+        idx.bulkload(keys, payloads_for(keys))
+        rng = np.random.default_rng(0)
+        q = rng.choice(keys, batch).astype(np.uint64)
+
+        t0 = time.perf_counter()
+        for k in q[:512]:
+            idx.lookup(int(k))
+        host_qps = 512 / (time.perf_counter() - t0)
+
+        di = build_device_index(idx)
+        from repro.core.lookup import device_arrays, lookup_batch
+        import jax.numpy as jnp
+        arrs = device_arrays(di)
+        h = max(di.max_inner_height, 3)
+        pay, found, _ = lookup_batch(arrs, jnp.asarray(q), height=h)  # compile
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            pay, found, _ = lookup_batch(arrs, jnp.asarray(q), height=h)
+            pay.block_until_ready()
+        dev_qps = reps * batch / (time.perf_counter() - t0)
+        assert bool(found.all())
+
+        from repro.kernels.inner_probe.ops import ProbeIndex, inner_probe_lookup
+        pi = ProbeIndex(di)
+        t0 = time.perf_counter()
+        payk, foundk, rounds = inner_probe_lookup(pi, q[:1024],
+                                                  interpret=True,
+                                                  count_rounds=True)
+        kern_qps = 1024 / (time.perf_counter() - t0)
+        assert foundk.all()
+
+        rows.append({"dataset": dataset, "host_qps": round(host_qps),
+                     "device_batch_qps": round(dev_qps),
+                     "kernel_interpret_qps": round(kern_qps),
+                     "kernel_block_rounds": rounds,
+                     "speedup_device_vs_host": round(dev_qps / host_qps, 1)})
+    save_results("device_lookup", rows, {"scale": scale, "batch": batch})
+    print_table("Device-batched lookup vs host pointer chasing "
+                "(CPU; kernel column is interpret-mode — structural only)",
+                rows, ["dataset", "host_qps", "device_batch_qps",
+                       "speedup_device_vs_host", "kernel_block_rounds"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""§Roofline reader: turn the recorded dry-run matrix into the per-(arch x
+shape) roofline table (terms in seconds, dominant bottleneck, MODEL_FLOPS
+ratio, fit-in-HBM check). Source of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import print_table, save_results
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    out = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        out.append(r)
+    return out
+
+
+def run(scale: str = "small") -> list[dict]:
+    del scale
+    rows = []
+    for r in load_cells("16x16"):
+        if r["status"] != "ok" or "roofline" not in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r["status"]})
+            continue
+        rf = r["roofline"]
+        peak = r.get("memory", {}).get("peak_bytes_per_device", 0)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": f"{rf['compute_s']:.2e}",
+            "memory_s": f"{rf['memory_s']:.2e}",
+            "collective_s": f"{rf['collective_s']:.2e}",
+            "dominant": rf["dominant"],
+            "roofline_frac": round(rf["compute_s"]
+                                   / max(rf["compute_s"], rf["memory_s"],
+                                         rf["collective_s"]), 3),
+            "useful_flops": round(r.get("useful_flops_ratio", 0), 2),
+            "peak_gb": round(peak / 1e9, 1),
+            "fits_16gb": bool(peak <= HBM_PER_CHIP),
+            "status": "ok",
+        })
+    multi = [r for r in load_cells("2x16x16")]
+    n_multi_ok = sum(1 for r in multi if r["status"] == "ok")
+    save_results("roofline", rows, {
+        "mesh": "16x16", "chips": 256,
+        "multi_pod_cells_ok": n_multi_ok, "multi_pod_cells": len(multi)})
+    print_table("§Roofline — single-pod 16x16 (256 chips), per step", rows,
+                ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                 "dominant", "roofline_frac", "useful_flops", "peak_gb",
+                 "fits_16gb"])
+    print(f"\nmulti-pod 2x16x16 shard proof: {n_multi_ok}/{len(multi)} "
+          f"cells compiled OK")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

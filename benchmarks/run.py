@@ -1,0 +1,48 @@
+"""Benchmark orchestrator: one module per paper table/figure + the TPU
+adaptation benches + the roofline reader.
+
+  PYTHONPATH=src python -m benchmarks.run [--module NAME] [--scale small|paper]
+
+Scale note: 'small' (60k keys, 512 B blocks) reproduces the paper's
+tree-height regime and relative ranks in minutes on one CPU core; 'paper'
+(200k keys) tightens the match at ~4x the time. See benchmarks/common.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = ["workloads", "bulkload", "tail_latency", "scalability",
+           "design_read_opts", "design_structures", "adjust_study",
+           "device_lookup", "roofline"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--module", default=None, choices=MODULES)
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "paper", "large"])
+    args = ap.parse_args()
+    mods = [args.module] if args.module else MODULES
+    failures = []
+    for name in mods:
+        print(f"\n{'=' * 72}\n=== benchmarks.{name} (scale={args.scale})\n"
+              f"{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(scale=args.scale)
+            print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        return 1
+    print(f"\nall {len(mods)} benchmarks green; results in experiments/bench/")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

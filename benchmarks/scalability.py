@@ -1,0 +1,60 @@
+"""Figs 11/12: AULID vs B+-tree as N grows (the paper's 800M-key study,
+scaled; same tree-height regimes via the 512 B geometry)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.workloads import make_dataset, payloads_for, run_workload
+
+from .common import make_index, print_table, save_results, scaled_geometry
+
+SIZES = [50_000, 150_000, 400_000]
+WLS = ["w1_lookup", "w2_scan", "w3_write", "w5_balanced"]
+
+
+def run(scale: str = "small") -> list[dict]:
+    sizes = SIZES[:2] if scale == "small" else SIZES
+    rows = []
+    with scaled_geometry():
+        for n in sizes:
+            for dataset in ("covid", "osm"):
+                keys = make_dataset(dataset, n)
+                # Fig 12: bulkload time + size
+                for name in ("aulid", "btree"):
+                    idx = make_index(name)
+                    t0 = time.perf_counter()
+                    idx.bulkload(keys, payloads_for(keys))
+                    rows.append({"figure": "Fig 12", "n": n,
+                                 "dataset": dataset, "index": name,
+                                 "workload": "bulkload",
+                                 "metric": round(time.perf_counter() - t0, 2),
+                                 "storage_mb": round(idx.storage_bytes / 1e6, 1)})
+                # Fig 11: throughput speedup vs B+-tree
+                for wl in WLS:
+                    res = {}
+                    for name in ("aulid", "btree"):
+                        r = run_workload(make_index(name), wl, keys, dataset,
+                                         n_queries=2_000)
+                        res[name] = r
+                    rows.append({
+                        "figure": "Fig 11", "n": n, "dataset": dataset,
+                        "index": "aulid", "workload": wl,
+                        "metric": round(res["btree"].blocks_per_op
+                                        / max(res["aulid"].blocks_per_op,
+                                              1e-9), 3),
+                        "storage_mb": round(res["aulid"].storage_bytes / 1e6, 1)})
+    save_results("scalability", rows)
+    print_table("Fig 11 — AULID speedup over B+-tree "
+                "(blocks-per-op ratio; >1 = AULID better)",
+                [r for r in rows if r["figure"] == "Fig 11"],
+                ["n", "dataset", "workload", "metric"])
+    print_table("Fig 12 — bulkload at scale",
+                [r for r in rows if r["figure"] == "Fig 12"],
+                ["n", "dataset", "index", "metric", "storage_mb"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

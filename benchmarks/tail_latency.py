@@ -1,0 +1,32 @@
+"""Fig 10: p99 latency + std on Lookup-Only and Write-Only workloads."""
+from __future__ import annotations
+
+from repro.core.workloads import make_dataset, run_workload
+
+from .common import (INDEXES, SCALE_N, make_index, print_table, save_results,
+                     scaled_geometry)
+
+
+def run(scale: str = "small", datasets=("covid", "osm")) -> list[dict]:
+    n = SCALE_N[scale]
+    rows = []
+    with scaled_geometry():
+        for dataset in datasets:
+            keys = make_dataset(dataset, n)
+            for wl in ("w1_lookup", "w3_write"):
+                for name in INDEXES:
+                    idx = make_index(name)
+                    r = run_workload(idx, wl, keys, dataset,
+                                     n_queries=3_000, measure_lat=True)
+                    rows.append({"figure": "Fig 10", "workload": wl,
+                                 "dataset": dataset, "index": name,
+                                 "p50_us": r.p50_us, "p99_us": r.p99_us,
+                                 "std_us": r.lat_std_us})
+    save_results("tail_latency", rows, {"scale": scale})
+    print_table(f"Fig 10 — tail latency (N={n}; CPU-sim wall time)", rows,
+                ["workload", "dataset", "index", "p50_us", "p99_us", "std_us"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

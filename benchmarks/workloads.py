@@ -1,0 +1,65 @@
+"""Figs 5/6/7: W1 Lookup-Only, W2 Scan-Only, W3 Write-Only, W4-W6 mixed —
+throughput + fetched blocks per query for AULID and the five baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.workloads import make_dataset, run_workload
+
+from .common import (DATASETS, INDEXES, SCALE_N, make_index, print_table,
+                     save_results, scaled_geometry)
+
+FIGS = {"w1_lookup": "Fig 5", "w2_scan": "Fig 6", "w3_write": "Fig 7a",
+        "w4_read_heavy": "Fig 7b", "w5_balanced": "Fig 7c",
+        "w6_write_heavy": "Fig 7d"}
+
+
+def run(scale: str = "small", n_queries: int = 4_000,
+        workloads=None, indexes=None) -> list[dict]:
+    n = SCALE_N[scale]
+    rows = []
+    with scaled_geometry():
+        for dataset in DATASETS:
+            keys = make_dataset(dataset, n)
+            for wl in (workloads or FIGS):
+                for name in (indexes or INDEXES):
+                    idx = make_index(name)
+                    r = run_workload(idx, wl, keys, dataset,
+                                     n_queries=n_queries)
+                    rows.append({"figure": FIGS.get(wl, wl), "workload": wl,
+                                 "dataset": dataset, "index": name,
+                                 "throughput": round(r.throughput),
+                                 "reads_per_op": round(r.reads_per_op, 2),
+                                 "writes_per_op": round(r.writes_per_op, 2),
+                                 "blocks_per_op": round(r.blocks_per_op, 2),
+                                 "storage_mb": round(r.storage_bytes / 1e6, 2)})
+    save_results("workloads", rows, {"scale": scale, "n_keys": n,
+                                     "n_queries": n_queries})
+    for wl in (workloads or FIGS):
+        sub = [r for r in rows if r["workload"] == wl]
+        print_table(f"{FIGS.get(wl, wl)} — {wl} (N={n})", sub,
+                    ["dataset", "index", "throughput", "reads_per_op",
+                     "writes_per_op", "storage_mb"])
+    # headline: AULID vs best-of-rest speedups per workload (paper abstract)
+    summary = []
+    for wl in (workloads or FIGS):
+        sub = [r for r in rows if r["workload"] == wl]
+        for dataset in DATASETS:
+            d = [r for r in sub if r["dataset"] == dataset]
+            if not d:
+                continue
+            a = next(r for r in d if r["index"] == "aulid")
+            for r in d:
+                if r["index"] != "aulid" and r["blocks_per_op"] > 0:
+                    summary.append({
+                        "workload": wl, "dataset": dataset, "vs": r["index"],
+                        "blocks_ratio": round(r["blocks_per_op"]
+                                              / max(a["blocks_per_op"], 1e-9), 2),
+                        "thpt_ratio": round(a["throughput"]
+                                            / max(r["throughput"], 1), 2)})
+    save_results("workloads_speedups", summary)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Paper-style comparison at laptop scale: AULID vs the five baselines on
+the Lookup-Only and Write-Only workloads of one easy and one hard dataset.
+Reproduces the SHAPE of Figs 5/7 (fetched blocks per query is the
+hardware-independent metric; see benchmarks/ for the full matrix).
+
+  PYTHONPATH=src python examples/index_workloads.py
+"""
+from repro.core import Aulid
+from repro.core.baselines import ALL_BASELINES
+from repro.core.workloads import make_dataset, run_workload
+
+N = 60_000
+INDEXES = {"aulid": Aulid, **ALL_BASELINES}
+
+for dataset in ("covid", "osm"):
+    keys = make_dataset(dataset, N)
+    print(f"\n=== {dataset} ({N} keys) ===")
+    print(f"{'index':12s} {'W1 reads/q':>11s} {'W3 IOs/op':>11s} "
+          f"{'storage MB':>11s}")
+    for name, cls in INDEXES.items():
+        r1 = run_workload(cls(), "w1_lookup", keys, dataset, n_queries=2_000)
+        r3 = run_workload(cls(), "w3_write", keys, dataset, n_queries=2_000)
+        print(f"{name:12s} {r1.reads_per_op:11.2f} "
+              f"{r3.blocks_per_op:11.2f} {r1.storage_bytes / 1e6:11.1f}")

@@ -1,0 +1,7 @@
+"""Checkpointing: sharded pytree save/restore + learned manifest + elastic
+resharding."""
+from .ckpt import (load_manifest, restore_checkpoint, restore_params_subset,
+                   save_checkpoint)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_params_subset",
+           "load_manifest"]

@@ -1,0 +1,28 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` resolves an architecture id (``--arch``) to its
+ModelConfig; sources/tiers are per the assignment table (see module
+docstrings).
+"""
+from .base import ModelConfig, ShapeConfig, SHAPES, shapes_for, LONG_CONTEXT_ARCHS
+from . import (zamba2_1p2b, qwen3_4b, gemma2_9b, qwen3_8b, qwen1p5_32b,
+               granite_moe_1b, qwen2_moe_a2p7b, rwkv6_1p6b, musicgen_medium,
+               llama32_vision_11b)
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        zamba2_1p2b.CONFIG, qwen3_4b.CONFIG, gemma2_9b.CONFIG, qwen3_8b.CONFIG,
+        qwen1p5_32b.CONFIG, granite_moe_1b.CONFIG, qwen2_moe_a2p7b.CONFIG,
+        rwkv6_1p6b.CONFIG, musicgen_medium.CONFIG, llama32_vision_11b.CONFIG,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_config",
+           "shapes_for", "LONG_CONTEXT_ARCHS"]

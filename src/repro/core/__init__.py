@@ -1,0 +1,8 @@
+"""AULID core: the paper's contribution + baselines + device lookup path."""
+from .aulid import Aulid, AulidConfig
+from .blockdev import BlockDevice, IOStats
+from .fmcd import LinearModel, fmcd, conflict_degree, dataset_conflict_degree
+from .interface import OrderedIndex
+
+__all__ = ["Aulid", "AulidConfig", "BlockDevice", "IOStats", "LinearModel",
+           "fmcd", "conflict_degree", "dataset_conflict_degree", "OrderedIndex"]

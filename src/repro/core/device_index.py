@@ -1,0 +1,227 @@
+"""Read-only device mirror of an AULID index for batched JAX/Pallas lookups.
+
+The host structure (``aulid.py``) is pointer-based; the TPU adaptation
+(DESIGN.md §2) flattens it into dense pools so a *whole batch* of queries
+traverses the index with vectorized gathers and **no data-dependent control
+flow** — possible because AULID's Adjust mechanism bounds the inner mixed-node
+height (<= 3), letting us fully unroll the traversal.
+
+Key precomputations that replace the paper's on-disk forward scans with O(1)
+gathers (they are the device-side generalization of the paper's own *Fulfill*
+optimization, §4.2.3 — valid because the mirror is a read-only snapshot):
+
+* ``next_occ[s]``   — first non-NULL slot at or after ``s`` within the same
+  node; -1 past the node's last entry,
+* ``succ_slot[s]``  — for an occupied slot: the next occupied slot in the
+  node, or (recursively) the node's successor slot in its ancestor chain;
+  -1 at the global end,
+* ``node_overflow_slot[n]`` — the ``succ_slot`` of node n viewed as an entry
+  of its parent (continuation point when a query runs past n's last entry).
+
+Device traversal is robust to floating-point slot-prediction skew (XLA may
+fuse multiply-adds, shifting ``floor(a*k+b)`` by one near slot boundaries):
+the prediction — minus a one-slot safety margin — only picks the *starting*
+slot; the responsible entry is then found by deterministic integer max-key
+comparisons along the ``succ_slot`` chain.  Host placement guarantees stale
+entries (max key < q) occur only at slots <= slot(q), so at most 3 chain
+steps are ever needed from ``pred-1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .aulid import (Aulid, BTreeNode, MixedNode, PackedArray,
+                    TAG_BT, TAG_DATA, TAG_MIXED, TAG_NULL, TAG_PA)
+
+UINT64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+@dataclasses.dataclass
+class DeviceIndex:
+    """Flat arrays (numpy here; ``lookup.py`` moves them to jnp)."""
+    # slot pools (all mixed nodes concatenated)
+    slot_tag: np.ndarray      # (S,) u8
+    slot_key: np.ndarray      # (S,) u64   (max key of the slot's entry/subtree)
+    slot_ptr: np.ndarray      # (S,) i32   DATA: leaf row, PA/BT: pool row, MIXED: node id
+    next_occ: np.ndarray      # (S,) i32   next non-NULL slot in node, -1 past end
+    succ_slot: np.ndarray     # (S,) i32   successor entry slot (cross-node), -1 at end
+    # node tables
+    node_base: np.ndarray     # (N,) i32 first slot index
+    node_fanout: np.ndarray   # (N,) i32
+    node_slope: np.ndarray    # (N,) f64
+    node_intercept: np.ndarray  # (N,) f64
+    node_overflow_slot: np.ndarray  # (N,) i32 continuation slot in ancestors (-1 end)
+    # packed-array pool (padded to the largest class with +inf keys)
+    pa_keys: np.ndarray       # (P, pa_cap) u64
+    pa_ptrs: np.ndarray       # (P, pa_cap) i32 leaf rows
+    # two-layer B+-tree pool, flattened to one sorted row per BT
+    bt_keys: np.ndarray       # (B, bt_cap) u64
+    bt_ptrs: np.ndarray       # (B, bt_cap) i32
+    # leaf pool
+    leaf_keys: np.ndarray     # (L, leaf_cap) u64 (+inf padded)
+    leaf_pay: np.ndarray      # (L, leaf_cap) u64
+    leaf_count: np.ndarray    # (L,) i32
+    leaf_next: np.ndarray     # (L,) i32 row of right sibling, -1 at end
+    # metanode
+    root_node: int
+    last_leaf_row: int
+    last_leaf_min: np.uint64
+    inner_height: int
+    leaf_rows: dict[int, int] = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def max_inner_height(self) -> int:
+        return max(self.inner_height, 1)
+
+
+def build_device_index(idx: Aulid) -> DeviceIndex:
+    """Snapshot an AULID host index into flat device pools."""
+    cfg = idx.cfg
+    # ---- leaf pool, ordered by the sibling chain (rows follow key order)
+    leaf_ids: list[int] = []
+    b = idx.first_leaf
+    while b >= 0:
+        leaf_ids.append(b)
+        b = idx.leaf_next.get(b, -1)
+    if not leaf_ids:
+        leaf_ids = []
+    rows = {bid: r for r, bid in enumerate(leaf_ids)}
+    L = max(len(leaf_ids), 1)
+    cap = cfg.leaf_capacity
+    leaf_keys = np.full((L, cap), UINT64_MAX, dtype=np.uint64)
+    leaf_pay = np.zeros((L, cap), dtype=np.uint64)
+    leaf_count = np.zeros(L, dtype=np.int32)
+    leaf_next = np.full(L, -1, dtype=np.int32)
+    for r, bid in enumerate(leaf_ids):
+        c = idx.leaf_count[bid]
+        leaf_keys[r, :c] = idx.leaf_keys[bid][:c]
+        leaf_pay[r, :c] = idx.leaf_pay[bid][:c]
+        leaf_count[r] = c
+        nb = idx.leaf_next.get(bid, -1)
+        leaf_next[r] = rows[nb] if nb >= 0 else -1
+    last_row = rows.get(idx.last_leaf, L - 1)
+
+    # ---- enumerate mixed nodes (preorder), packed arrays, and B+-trees
+    nodes: list[MixedNode] = []
+    pas: list[PackedArray] = []
+    bts: list[BTreeNode] = []
+
+    def visit(n: MixedNode) -> None:
+        nodes.append(n)
+        for s in sorted(n.objs):
+            o = n.objs[s]
+            if isinstance(o, PackedArray):
+                pas.append(o)
+            elif isinstance(o, BTreeNode):
+                bts.append(o)
+            else:
+                visit(o)
+
+    height = 0
+    if idx.root is not None:
+        visit(idx.root)
+        height = idx.inner_height()
+    node_id = {id(n): i for i, n in enumerate(nodes)}
+    pa_id = {id(p): i for i, p in enumerate(pas)}
+    bt_id = {id(t): i for i, t in enumerate(bts)}
+
+    N = max(len(nodes), 1)
+    S = max(sum(n.fanout for n in nodes), 1)
+    node_base = np.zeros(N, dtype=np.int32)
+    node_fanout = np.ones(N, dtype=np.int32)
+    node_slope = np.zeros(N, dtype=np.float64)
+    node_intercept = np.zeros(N, dtype=np.float64)
+    node_overflow = np.full(N, -1, dtype=np.int32)
+    slot_tag = np.zeros(S, dtype=np.uint8)
+    slot_key = np.full(S, UINT64_MAX, dtype=np.uint64)
+    slot_ptr = np.full(S, -1, dtype=np.int32)
+    succ_slot = np.full(S, -1, dtype=np.int32)
+    next_occ = np.full(S, -1, dtype=np.int32)
+
+    off = 0
+    for i, n in enumerate(nodes):
+        node_base[i] = off
+        node_fanout[i] = n.fanout
+        node_slope[i] = n.model.slope
+        node_intercept[i] = n.model.intercept
+        off += n.fanout
+
+    # pools (sized to actual maxima; +inf padding keeps searchsorted semantics)
+    pa_cap = max([p.capacity for p in pas], default=1)
+    P = max(len(pas), 1)
+    pa_keys = np.full((P, pa_cap), UINT64_MAX, dtype=np.uint64)
+    pa_ptrs = np.full((P, pa_cap), last_row, dtype=np.int32)
+    for j, p in enumerate(pas):
+        pa_keys[j, : p.count] = p.keys[: p.count]
+        pa_ptrs[j, : p.count] = [rows[int(x)] for x in p.ptrs[: p.count]]
+    bt_cap = max([t.count for t in bts], default=1)
+    B = max(len(bts), 1)
+    bt_keys = np.full((B, bt_cap), UINT64_MAX, dtype=np.uint64)
+    bt_ptrs = np.full((B, bt_cap), last_row, dtype=np.int32)
+    for j, t in enumerate(bts):
+        es = t.entries()
+        bt_keys[j, : len(es)] = [e[0] for e in es]
+        bt_ptrs[j, : len(es)] = [rows[e[1]] for e in es]
+
+    def subtree_max(n: MixedNode) -> int:
+        """Max key under a mixed node. Host inserts keep PA/BT/DATA slot keys
+        current but do not write a max into MIXED slots (the paper stores only
+        model+address there); the mirror needs it for successor-chain tests."""
+        occ = np.nonzero(n.tags != TAG_NULL)[0]
+        if not occ.size:
+            return 0
+        s = int(occ[-1])
+        if int(n.tags[s]) == TAG_MIXED:
+            return subtree_max(n.objs[s])  # type: ignore[arg-type]
+        return int(n.keys[s])
+
+    # fill slots + per-node next_occ; the node's overflow continuation slot
+    # (its successor entry in the ancestor chain) is threaded down recursively.
+    def fill(n: MixedNode, overflow_slot: int) -> None:
+        i = node_id[id(n)]
+        node_overflow[i] = overflow_slot
+        base = node_base[i]
+        occ = np.nonzero(n.tags != TAG_NULL)[0]
+        # next_occ: for every slot s, the first occupied slot >= s (in node)
+        nxt = np.full(n.fanout, -1, dtype=np.int32)
+        if occ.size:
+            ins = np.searchsorted(occ, np.arange(n.fanout), side="left")
+            valid = ins < occ.size
+            nxt[valid] = base + occ[np.minimum(ins[valid], occ.size - 1)]
+        next_occ[base : base + n.fanout] = nxt
+        for k, s in enumerate(occ):
+            s = int(s)
+            g = base + s
+            succ = base + int(occ[k + 1]) if k + 1 < occ.size else overflow_slot
+            tag = int(n.tags[s])
+            slot_tag[g] = tag
+            slot_key[g] = (n.keys[s] if tag != TAG_MIXED
+                           else np.uint64(subtree_max(n.objs[s])))  # type: ignore[arg-type]
+            succ_slot[g] = succ
+            o = n.objs.get(s)
+            if tag == TAG_DATA:
+                slot_ptr[g] = rows.get(int(n.ptrs[s]), last_row)
+            elif tag == TAG_PA:
+                slot_ptr[g] = pa_id[id(o)]
+            elif tag == TAG_BT:
+                slot_ptr[g] = bt_id[id(o)]
+            else:  # child mixed node continues at this entry's successor
+                slot_ptr[g] = node_id[id(o)]
+                fill(o, succ)  # type: ignore[arg-type]
+
+    if idx.root is not None:
+        fill(idx.root, -1)
+
+    return DeviceIndex(
+        slot_tag=slot_tag, slot_key=slot_key, slot_ptr=slot_ptr,
+        next_occ=next_occ, succ_slot=succ_slot,
+        node_base=node_base, node_fanout=node_fanout, node_slope=node_slope,
+        node_intercept=node_intercept, node_overflow_slot=node_overflow,
+        pa_keys=pa_keys, pa_ptrs=pa_ptrs, bt_keys=bt_keys, bt_ptrs=bt_ptrs,
+        leaf_keys=leaf_keys, leaf_pay=leaf_pay, leaf_count=leaf_count,
+        leaf_next=leaf_next, root_node=0 if idx.root is not None else -1,
+        last_leaf_row=last_row, last_leaf_min=np.uint64(idx.last_leaf_min),
+        inner_height=height, leaf_rows=rows,
+    )

@@ -1,0 +1,168 @@
+"""Batched JAX lookup/scan over a :class:`DeviceIndex` mirror.
+
+This is the TPU-native read path of AULID (DESIGN.md §2): the bounded inner
+height (paper §4.4) lets us fully unroll the root-to-leaf traversal, so a
+batch of Q queries becomes ``height`` rounds of dense gathers + one leaf-block
+search — no per-query control flow, VPU-friendly, and directly mappable to
+the Pallas kernels in ``repro.kernels``.
+
+Uses 64-bit types (uint64 keys, float64 models) — enabled module-locally via
+``jax.config``; the LM-framework model code never imports this module and uses
+explicit 32/16-bit dtypes throughout, so the global x64 flag is safe there.
+On a real TPU, XLA emulates 64-bit integers with u32 pairs; the two-plane
+comparison variant is implemented natively in ``repro.kernels.leaf_search``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .device_index import DeviceIndex  # noqa: E402
+
+
+def device_arrays(di: DeviceIndex) -> dict[str, jnp.ndarray]:
+    """Move the mirror pools to device (jnp) arrays."""
+    fields = ["slot_tag", "slot_key", "slot_ptr", "next_occ", "succ_slot",
+              "node_base", "node_fanout", "node_slope", "node_intercept",
+              "node_overflow_slot", "pa_keys", "pa_ptrs", "bt_keys",
+              "bt_ptrs", "leaf_keys", "leaf_pay", "leaf_count", "leaf_next"]
+    d = {f: jnp.asarray(getattr(di, f)) for f in fields}
+    d["meta"] = jnp.array([di.root_node, di.last_leaf_row], dtype=jnp.int32)
+    d["last_leaf_min"] = jnp.asarray(di.last_leaf_min)
+    return d
+
+
+TAG_NULL, TAG_DATA, TAG_PA, TAG_BT, TAG_MIXED = 0, 1, 2, 3, 4
+
+
+def _row_search(pool_keys: jnp.ndarray, rows: jnp.ndarray, q: jnp.ndarray):
+    """Vectorized intra-block search: for each query q[i], the position of the
+    first key >= q within pool row rows[i] (the paper's per-block binary
+    search becomes one whole-block compare — DESIGN.md §2)."""
+    blk = jnp.take(pool_keys, rows, axis=0, mode="clip")      # (Q, C)
+    pos = jnp.sum(blk < q[:, None], axis=1).astype(jnp.int32)  # (Q,)
+    return blk, pos
+
+
+STALE_STEPS = 4  # max successor-chain steps per level (>= 3 suffices, see mirror)
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def lookup_batch(arrs: dict, q: jnp.ndarray, height: int = 3):
+    """Batched point lookup. Returns (payload u64, found bool, leaf_row i32).
+
+    Per level: predict a starting slot (with a one-slot safety margin against
+    fp skew), walk the precomputed successor-entry chain until the first entry
+    whose max key >= q (deterministic integer compares), then resolve it by
+    tag — DATA -> leaf, PA/BT -> one whole-block vectorized search, MIXED ->
+    descend. Chain exhaustion (-1) means "no entry >= q": the metanode's last
+    leaf is the global successor sentinel (paper §4.2.1)."""
+    q = q.astype(jnp.uint64)
+    Q = q.shape[0]
+    root = arrs["meta"][0]
+    last_row = arrs["meta"][1]
+
+    # Metanode shortcut (paper §4.2.1): keys >= last leaf's min go straight
+    # to the last leaf; likewise when there is no inner part at all.
+    in_last = q >= arrs["last_leaf_min"]
+    no_root = root < 0
+
+    node = jnp.full((Q,), jnp.maximum(root, 0), dtype=jnp.int32)
+    leaf = jnp.full((Q,), -1, dtype=jnp.int32)
+    done = in_last | no_root
+    leaf = jnp.where(done, last_row, leaf)
+
+    qf = q.astype(jnp.float64)
+    S = arrs["slot_tag"].shape[0]
+    for _ in range(height):
+        base = jnp.take(arrs["node_base"], node, mode="clip")
+        fanout = jnp.take(arrs["node_fanout"], node, mode="clip")
+        slope = jnp.take(arrs["node_slope"], node, mode="clip")
+        inter = jnp.take(arrs["node_intercept"], node, mode="clip")
+        overflow = jnp.take(arrs["node_overflow_slot"], node, mode="clip")
+        pred = jnp.clip(jnp.floor(slope * qf + inter) - 1, 0, fanout - 1).astype(jnp.int32)
+        s = jnp.take(arrs["next_occ"], base + pred, mode="clip")
+        s = jnp.where(s < 0, overflow, s)
+        # skip stale entries (max key < q) along the successor chain
+        for _ in range(STALE_STEPS):
+            key_s = jnp.take(arrs["slot_key"], jnp.clip(s, 0, S - 1), mode="clip")
+            stale = (s >= 0) & (key_s < q)
+            nxt = jnp.take(arrs["succ_slot"], jnp.clip(s, 0, S - 1), mode="clip")
+            s = jnp.where(stale, nxt, s)
+        ended = s < 0
+        sc = jnp.clip(s, 0, S - 1)
+        tag = jnp.take(arrs["slot_tag"], sc, mode="clip")
+        ptr = jnp.take(arrs["slot_ptr"], sc, mode="clip")
+
+        # PA / BT: one whole-block search (entry max >= q guarantees a hit)
+        _, pa_pos = _row_search(arrs["pa_keys"], jnp.maximum(ptr, 0), q)
+        pa_hit = jnp.take_along_axis(
+            jnp.take(arrs["pa_ptrs"], jnp.maximum(ptr, 0), axis=0, mode="clip"),
+            pa_pos[:, None] % arrs["pa_ptrs"].shape[1], axis=1)[:, 0]
+        _, bt_pos = _row_search(arrs["bt_keys"], jnp.maximum(ptr, 0), q)
+        bt_hit = jnp.take_along_axis(
+            jnp.take(arrs["bt_ptrs"], jnp.maximum(ptr, 0), axis=0, mode="clip"),
+            bt_pos[:, None] % arrs["bt_ptrs"].shape[1], axis=1)[:, 0]
+
+        is_mixed = (tag == TAG_MIXED) & ~ended
+        step_leaf = jnp.where(ended, last_row,
+                    jnp.where(tag == TAG_DATA, ptr,
+                    jnp.where(tag == TAG_PA, pa_hit,
+                    jnp.where(tag == TAG_BT, bt_hit, -1))))
+        newly = ~done & ~is_mixed
+        leaf = jnp.where(newly, step_leaf, leaf)
+        done = done | newly
+        node = jnp.where(~done & is_mixed, ptr, node)
+
+    # Final leaf search (the paper's one-block binary search, vectorized).
+    leaf = jnp.maximum(leaf, 0)
+    blk, pos = _row_search(arrs["leaf_keys"], leaf, q)
+    cap = blk.shape[1]
+    hit_key = jnp.take_along_axis(blk, pos[:, None] % cap, axis=1)[:, 0]
+    pay = jnp.take_along_axis(
+        jnp.take(arrs["leaf_pay"], leaf, axis=0, mode="clip"),
+        pos[:, None] % cap, axis=1)[:, 0]
+    found = (pos < cap) & (hit_key == q)
+    return jnp.where(found, pay, 0), found, leaf
+
+
+@functools.partial(jax.jit, static_argnames=("height", "count", "max_blocks"))
+def scan_batch(arrs: dict, q: jnp.ndarray, count: int = 100, height: int = 3,
+               max_blocks: int | None = None):
+    """Batched range scan: ``count`` pairs with key >= q[i] per query.
+
+    Walks ``leaf_next`` sibling links (paper §4.2.2); the number of fetched
+    blocks per query is ceil(count/leaf_fill)+1 — the locality the B+-tree
+    styled leaves buy (P5). Returns (keys (Q,count), payloads, valid mask)."""
+    _, _, leaf0 = lookup_batch(arrs, q, height=height)
+    q = q.astype(jnp.uint64)
+    cap = arrs["leaf_keys"].shape[1]
+    if max_blocks is None:
+        max_blocks = count // max(cap // 2, 1) + 2
+    Q = q.shape[0]
+    out_k = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
+    out_p = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
+    out_v = jnp.zeros((Q, max_blocks * cap), dtype=bool)
+    leaf = leaf0
+    for b in range(max_blocks):
+        ks = jnp.take(arrs["leaf_keys"], leaf, axis=0, mode="clip")
+        ps = jnp.take(arrs["leaf_pay"], leaf, axis=0, mode="clip")
+        cnt = jnp.take(arrs["leaf_count"], leaf, mode="clip")
+        valid = (jnp.arange(cap)[None, :] < cnt[:, None]) & (ks >= q[:, None]) \
+            & (leaf >= 0)[:, None]
+        out_k = out_k.at[:, b * cap : (b + 1) * cap].set(ks)
+        out_p = out_p.at[:, b * cap : (b + 1) * cap].set(ps)
+        out_v = out_v.at[:, b * cap : (b + 1) * cap].set(valid)
+        leaf = jnp.where(leaf >= 0, jnp.take(arrs["leaf_next"], leaf, mode="clip"), -1)
+    # compact: order valid entries first (keys within+across blocks are sorted)
+    order = jnp.argsort(~out_v, axis=1, stable=True)[:, :count]
+    keys = jnp.take_along_axis(out_k, order, axis=1)
+    pays = jnp.take_along_axis(out_p, order, axis=1)
+    vmask = jnp.take_along_axis(out_v, order, axis=1)
+    return keys, pays, vmask

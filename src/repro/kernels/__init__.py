@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the compute hot-spots of the AULID read path and
+the learned-paged-KV serving path.
+
+Each kernel directory holds:
+  <name>.py — the pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (plane packing, level composition)
+  ref.py    — the pure-jnp oracle the tests assert against
+
+TPU adaptation of the paper's I/O model (DESIGN.md §2): a 4 KB disk block
+becomes a 4 KB HBM tile; "fetch a block" becomes a scalar-prefetched
+HBM->VMEM DMA selected by a BlockSpec index_map; the per-block binary search
+becomes a whole-block compare-and-reduce on the VPU.
+
+Keys are uint64 in the host index; TPUs have no native 64-bit lanes, so the
+kernels operate on two u32 planes (hi, lo) with lexicographic compares.
+
+Kernels are validated in interpret=True mode on CPU (this container has no
+TPU); the pallas_call/BlockSpec structure is the deployable artifact.
+"""
+from .leaf_search.ops import leaf_search
+from .inner_probe.ops import inner_probe_lookup
+from .paged_attention.ops import paged_attention
+
+__all__ = ["leaf_search", "inner_probe_lookup", "paged_attention"]

@@ -1,0 +1,3 @@
+from .ops import inner_probe_lookup
+
+__all__ = ["inner_probe_lookup"]

@@ -1,0 +1,113 @@
+"""Pallas kernel: one inner-level resolve of the AULID device mirror.
+
+The paper's inner step (§4.2.1): the FMCD model predicts a slot, ONE block
+holding that slot is fetched, and the responsible entry is found by walking
+forward (NULL-slot scan / ScanFward stale-skip).  TPU adaptation:
+
+* the 4 KB inner block  -> a scalar-prefetched (1, SPB) tile of the flat slot
+  pools (SPB = 128 slots/block, the paper's mixed-node block geometry);
+* the forward walk      -> the mirror's precomputed ``next_occ``/``succ_slot``
+  chains, walked a *static* 3 steps with vectorized one-hot gathers in VMEM
+  (the mirror guarantees <= 3 stale entries from the safety-margin slot);
+* chain hops that leave the fetched block emit ``KIND_CONT`` so the driver
+  issues another round — each round is exactly one block fetch, reproducing
+  the paper's extra-I/O accounting for Issue 1/2 (§4.2.3).
+
+The FMCD slot *prediction* stays outside the kernel in f64 (TPUs have no
+64-bit lanes; prediction is O(Q) scalar math while block I/O is the cost —
+the same asymmetry the paper exploits on disk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SPB = 128  # slots per 4 KB inner block (32 B per slot, model in parent)
+
+# out_kind codes (match device-mirror slot tags where possible)
+KIND_CONT = 7    # chain left the block: continue at out_val (one more fetch)
+KIND_END = 6     # chain exhausted: resolve to the metanode's last leaf
+# 1=DATA -> leaf row, 2=PA pool row, 3=BT pool row, 4=MIXED -> child node id
+
+
+def _lt(ah, al, bh, bl):
+    return (ah < bh) | ((ah == bh) & (al < bl))
+
+
+def _gather(row, idx):
+    """row (1,SPB); idx scalar -> row[0, idx] via one-hot reduce (VPU)."""
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (1, SPB), 1)[0] == idx
+    return jnp.sum(jnp.where(onehot, row[0, :], jnp.zeros_like(row[0, :])))
+
+
+def _kernel(blk_ref,                          # scalar-prefetch (Q,) i32
+            s_ref, qh_ref, ql_ref,            # (1,1) query state
+            tag_ref, kh_ref, kl_ref,          # (1,SPB) block tiles
+            ptr_ref, succ_ref, nocc_ref,
+            kind_ref, val_ref):               # (1,1) outputs
+    del blk_ref
+    s = s_ref[0, 0]
+    qh = qh_ref[0, 0]
+    ql = ql_ref[0, 0]
+    blk = s // SPB
+    base = blk * SPB
+
+    # entry point: first occupied slot at-or-after the predicted slot
+    cur = _gather(nocc_ref, s - base)
+
+    # static stale-skip walk (<= 3 hops suffice from the margin slot)
+    for _ in range(3):
+        in_blk = (cur >= base) & (cur < base + SPB)
+        lc = jnp.where(in_blk, cur - base, 0)
+        kh = _gather(kh_ref, lc).astype(jnp.uint32)
+        kl = _gather(kl_ref, lc).astype(jnp.uint32)
+        stale = in_blk & _lt(kh, kl, qh, ql)          # entry max key < q
+        nxt = _gather(succ_ref, lc)
+        cur = jnp.where(stale, nxt, cur)
+
+    ended = cur < 0
+    in_blk = (cur >= base) & (cur < base + SPB)
+    lc = jnp.where(in_blk, cur - base, 0)
+    tag = _gather(tag_ref, lc)
+    ptr = _gather(ptr_ref, lc)
+    kind = jnp.where(ended, KIND_END,
+                     jnp.where(in_blk, tag, KIND_CONT)).astype(jnp.int32)
+    val = jnp.where(in_blk, ptr, cur).astype(jnp.int32)
+    kind_ref[0, 0] = kind
+    val_ref[0, 0] = val
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe_level(slots: jnp.ndarray, qh: jnp.ndarray, ql: jnp.ndarray,
+                tag_b: jnp.ndarray, kh_b: jnp.ndarray, kl_b: jnp.ndarray,
+                ptr_b: jnp.ndarray, succ_b: jnp.ndarray, nocc_b: jnp.ndarray,
+                *, interpret: bool = True):
+    """One probe round. slots (Q,) i32 global slot ids; pools blocked
+    (NB, SPB). Returns (kind (Q,), val (Q,))."""
+    Q = slots.shape[0]
+    blk = (slots // SPB).astype(jnp.int32)
+    s2 = slots.reshape(Q, 1)
+    qh2 = qh.reshape(Q, 1)
+    ql2 = ql.reshape(Q, 1)
+    qspec = pl.BlockSpec((1, 1), lambda i, blk: (i, 0))
+    pool = pl.BlockSpec((1, SPB), lambda i, blk: (blk[i], 0))
+    out = pl.BlockSpec((1, 1), lambda i, blk: (i, 0))
+    kind, val = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(Q,),
+            in_specs=[qspec, qspec, qspec, pool, pool, pool, pool, pool, pool],
+            out_specs=[out, out],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blk, s2, qh2, ql2, tag_b, kh_b, kl_b, ptr_b, succ_b, nocc_b)
+    return kind[:, 0], val[:, 0]

@@ -1,0 +1,132 @@
+"""Full AULID lookup composed from Pallas probes.
+
+The driver keeps per-query traversal state on the host (numpy) and issues
+one ``probe_level`` kernel round per block fetch — exactly the paper's
+block-at-a-time traversal, batched.  FMCD slot prediction is f64 numpy (see
+inner_probe.py docstring for why prediction stays off-kernel on TPU); all
+block-data work (fetch, compare, chain walk, leaf search) runs in Pallas.
+
+PA/BT pool resolution reuses the leaf_search kernel: a packed array or
+two-layer B+-tree row is searched with the same "one block fetch + whole
+block compare" primitive (pay planes carry the leaf row ids).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.device_index import DeviceIndex
+from ..leaf_search.leaf_search import leaf_search_planes
+from ..leaf_search.ops import split_u64
+from .inner_probe import KIND_CONT, KIND_END, SPB, probe_level
+
+TAG_DATA, TAG_PA, TAG_BT, TAG_MIXED = 1, 2, 3, 4
+
+
+def _blocked(a: np.ndarray, pad_val) -> np.ndarray:
+    """(S,) -> (NB, SPB) with padding."""
+    S = len(a)
+    nb = max(-(-S // SPB), 1)
+    out = np.full(nb * SPB, pad_val, dtype=a.dtype)
+    out[:S] = a
+    return out.reshape(nb, SPB)
+
+
+class ProbeIndex:
+    """Kernel-ready packing of a DeviceIndex mirror."""
+
+    def __init__(self, di: DeviceIndex):
+        self.di = di
+        kh, kl = split_u64(di.slot_key)
+        self.tag_b = _blocked(di.slot_tag.astype(np.int32), 0)
+        self.kh_b = _blocked(kh, np.uint32(0xFFFFFFFF))
+        self.kl_b = _blocked(kl, np.uint32(0xFFFFFFFF))
+        self.ptr_b = _blocked(di.slot_ptr.astype(np.int32), -1)
+        self.succ_b = _blocked(di.succ_slot.astype(np.int32), -1)
+        self.nocc_b = _blocked(di.next_occ.astype(np.int32), -1)
+        self.pa_kh, self.pa_kl = split_u64(di.pa_keys)
+        self.pa_ptr = di.pa_ptrs.astype(np.uint32)
+        self.bt_kh, self.bt_kl = split_u64(di.bt_keys)
+        self.bt_ptr = di.bt_ptrs.astype(np.uint32)
+        self.leaf_kh, self.leaf_kl = split_u64(di.leaf_keys)
+        self.pay_h, self.pay_l = split_u64(di.leaf_pay)
+        self.zero_pa = np.zeros_like(self.pa_ptr)
+        self.zero_bt = np.zeros_like(self.bt_ptr)
+
+    def predict(self, node: np.ndarray, q: np.ndarray) -> np.ndarray:
+        """f64 FMCD slot prediction with the mirror's safety margin."""
+        di = self.di
+        slope = di.node_slope[node]
+        inter = di.node_intercept[node]
+        fanout = di.node_fanout[node]
+        pred = np.floor(slope * q.astype(np.float64) + inter) - 1
+        pred = np.clip(pred, 0, fanout - 1).astype(np.int64)
+        return (di.node_base[node] + pred).astype(np.int32)
+
+
+def inner_probe_lookup(pi: ProbeIndex, queries: np.ndarray, *,
+                       interpret: bool = True, count_rounds: bool = False):
+    """Batched lookup via Pallas probes. Returns (payload u64, found bool
+    [, probe_rounds])."""
+    di = pi.di
+    q = np.asarray(queries, dtype=np.uint64)
+    qh, ql = split_u64(q)
+    Q = len(q)
+    leaf = np.full(Q, -1, np.int64)
+
+    done = q >= np.uint64(di.last_leaf_min)
+    leaf[done] = di.last_leaf_row
+    if di.root_node < 0:
+        done[:] = True
+        leaf[:] = di.last_leaf_row
+
+    node = np.zeros(Q, np.int64)
+    slots = pi.predict(node, q)
+    rounds = 0
+    max_rounds = 4 * max(di.inner_height, 1) + 4
+    while not done.all() and rounds < max_rounds:
+        rounds += 1
+        act = ~done
+        kind, val = probe_level(
+            np.where(act, slots, 0).astype(np.int32), qh, ql,
+            pi.tag_b, pi.kh_b, pi.kl_b, pi.ptr_b, pi.succ_b, pi.nocc_b,
+            interpret=interpret)
+        kind = np.asarray(kind)
+        val = np.asarray(val)
+
+        is_end = act & (kind == KIND_END)
+        leaf[is_end] = di.last_leaf_row
+        done |= is_end
+
+        is_data = act & (kind == TAG_DATA)
+        leaf[is_data] = val[is_data]
+        done |= is_data
+
+        for tag, kh_p, kl_p, ptr_p in ((TAG_PA, pi.pa_kh, pi.pa_kl, pi.pa_ptr),
+                                       (TAG_BT, pi.bt_kh, pi.bt_kl, pi.bt_ptr)):
+            sel = act & (kind == tag)
+            if sel.any():
+                idx = np.nonzero(sel)[0]
+                _, row_lo, _ = leaf_search_planes(
+                    val[idx].astype(np.int32), qh[idx], ql[idx],
+                    kh_p, kl_p, np.zeros_like(ptr_p), ptr_p,
+                    interpret=interpret)
+                leaf[idx] = np.asarray(row_lo).astype(np.int64)
+                done[idx] = True
+                rounds += 1  # the PA/BT block fetch
+
+        is_mixed = act & (kind == TAG_MIXED)
+        if is_mixed.any():
+            node[is_mixed] = val[is_mixed]
+            slots[is_mixed] = pi.predict(node[is_mixed], q[is_mixed])
+
+        is_cont = act & (kind == KIND_CONT)
+        slots[is_cont] = val[is_cont]
+
+    leaf = np.where(leaf < 0, di.last_leaf_row, leaf).astype(np.int32)
+    _, _, _ = qh, ql, leaf
+    oh, ol, found = leaf_search_planes(leaf, qh, ql, pi.leaf_kh, pi.leaf_kl,
+                                       pi.pay_h, pi.pay_l, interpret=interpret)
+    pay = (np.asarray(oh, np.uint64) << np.uint64(32)) | np.asarray(ol, np.uint64)
+    if count_rounds:
+        return pay, np.asarray(found), rounds + 1
+    return pay, np.asarray(found)

@@ -1,0 +1,40 @@
+"""Pure-numpy oracle for one inner-probe round (identical semantics)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .inner_probe import KIND_CONT, KIND_END, SPB
+
+
+def probe_level_ref(slots, qh, ql, tag_b, kh_b, kl_b, ptr_b, succ_b, nocc_b):
+    Q = len(slots)
+    kind = np.zeros(Q, np.int32)
+    val = np.zeros(Q, np.int32)
+    tag_f = tag_b.reshape(-1)
+    kh_f = kh_b.reshape(-1)
+    kl_f = kl_b.reshape(-1)
+    ptr_f = ptr_b.reshape(-1)
+    succ_f = succ_b.reshape(-1)
+    nocc_f = nocc_b.reshape(-1)
+    for i in range(Q):
+        s = int(slots[i])
+        blk = s // SPB
+        base = blk * SPB
+        cur = int(nocc_f[s])
+        for _ in range(3):
+            in_blk = base <= cur < base + SPB
+            if not in_blk:
+                break
+            h, lo = int(kh_f[cur]), int(kl_f[cur])
+            q_h, q_l = int(qh[i]), int(ql[i])
+            stale = (h < q_h) or (h == q_h and lo < q_l)
+            if not stale:
+                break
+            cur = int(succ_f[cur])
+        if cur < 0:
+            kind[i], val[i] = KIND_END, cur
+        elif base <= cur < base + SPB:
+            kind[i], val[i] = int(tag_f[cur]), int(ptr_f[cur])
+        else:
+            kind[i], val[i] = KIND_CONT, cur
+    return kind, val

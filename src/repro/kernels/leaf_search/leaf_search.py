@@ -1,0 +1,88 @@
+"""Pallas kernel: fused "fetch one leaf block -> whole-block search".
+
+The paper's leaf step (§4.2.1: read ONE 4 KB block, binary-search 256
+key-payload pairs) adapted to TPU (DESIGN.md §2):
+
+* the 4 KB block read  -> one scalar-prefetched HBM->VMEM DMA: the BlockSpec
+  index_map is ``rows[i]`` (the leaf row resolved by the inner traversal),
+  so each grid step pulls exactly one leaf tile — the TPU twin of the
+  paper's "one block fetch per lookup";
+* the binary search    -> one whole-block compare-and-reduce on the VPU
+  (256 lanes of u32-plane lexicographic compares + a popcount beats 8
+  dependent branchy probes on this hardware);
+* uint64 keys          -> two u32 planes (hi, lo); TPUs have no 64-bit lanes.
+
+VMEM working set per grid step: 6 x (1, C) u32 tiles = 6 KB at the paper's
+C=256 — far under the ~16 MB VMEM budget, leaving the pipeline free to
+double-buffer the next query's block while this one is searched.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lt(ah, al, bh, bl):
+    """(ah,al) < (bh,bl) lexicographic on u32 planes."""
+    return (ah < bh) | ((ah == bh) & (al < bl))
+
+
+def _kernel(rows_ref,                        # scalar-prefetch (Q,) i32
+            qh_ref, ql_ref,                  # (1, 1) u32 query planes
+            kh_ref, kl_ref,                  # (1, C) u32 leaf key planes
+            ph_ref, pl_ref,                  # (1, C) u32 payload planes
+            oh_ref, ol_ref, of_ref):         # (1, 1) outputs
+    del rows_ref  # consumed by the BlockSpec index maps
+    qh = qh_ref[0, 0]
+    ql = ql_ref[0, 0]
+    kh = kh_ref[0, :]
+    kl = kl_ref[0, :]
+    # position of the first key >= q == number of keys < q (padding is
+    # 0xFFFFFFFF planes == u64 max, so padded slots never count)
+    lt = _lt(kh, kl, qh, ql)
+    pos = jnp.sum(lt.astype(jnp.int32))
+    C = kh.shape[0]
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)[0] == pos
+    hit_h = jnp.sum(jnp.where(onehot, kh, jnp.uint32(0)))
+    hit_l = jnp.sum(jnp.where(onehot, kl, jnp.uint32(0)))
+    found = (pos < C) & (hit_h == qh) & (hit_l == ql)
+    oh_ref[0, 0] = jnp.sum(jnp.where(onehot, ph_ref[0, :], jnp.uint32(0)))
+    ol_ref[0, 0] = jnp.sum(jnp.where(onehot, pl_ref[0, :], jnp.uint32(0)))
+    of_ref[0, 0] = found.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def leaf_search_planes(rows: jnp.ndarray,
+                       qh: jnp.ndarray, ql: jnp.ndarray,
+                       keys_hi: jnp.ndarray, keys_lo: jnp.ndarray,
+                       pay_hi: jnp.ndarray, pay_lo: jnp.ndarray,
+                       *, interpret: bool = True):
+    """rows (Q,) i32; q planes (Q,); pools (L, C) u32. Returns
+    (pay_hi (Q,), pay_lo (Q,), found (Q,) bool)."""
+    Q = rows.shape[0]
+    qh2 = qh.reshape(Q, 1)
+    ql2 = ql.reshape(Q, 1)
+    grid = (Q,)
+    qspec = pl.BlockSpec((1, 1), lambda i, rows: (i, 0))
+    pool = pl.BlockSpec((1, keys_hi.shape[1]), lambda i, rows: (rows[i], 0))
+    out = pl.BlockSpec((1, 1), lambda i, rows: (i, 0))
+    oh, ol, of = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[qspec, qspec, pool, pool, pool, pool],
+            out_specs=[out, out, out],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, qh2, ql2, keys_hi, keys_lo, pay_hi, pay_lo)
+    return oh[:, 0], ol[:, 0], of[:, 0].astype(bool)

@@ -1,0 +1,33 @@
+"""Public wrapper: u64 <-> u32-plane packing around the leaf_search kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+from .leaf_search import leaf_search_planes
+from .ref import leaf_search_ref
+
+
+def split_u64(a: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """uint64 array -> (hi, lo) uint32 planes."""
+    a = np.asarray(a, dtype=np.uint64)
+    return ((a >> np.uint64(32)).astype(np.uint32),
+            (a & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+def join_u64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(lo, np.uint64)
+
+
+def leaf_search(leaf_keys: np.ndarray, leaf_pay: np.ndarray,
+                rows: np.ndarray, queries: np.ndarray, *,
+                interpret: bool = True, use_ref: bool = False):
+    """Batched leaf-block search. leaf_keys/pay (L, C) u64 (+inf padded),
+    rows (Q,) i32, queries (Q,) u64 -> (payloads u64, found bool)."""
+    kh, kl = split_u64(leaf_keys)
+    ph, pl_ = split_u64(leaf_pay)
+    qh, ql = split_u64(queries)
+    rows = np.asarray(rows, np.int32)
+    fn = leaf_search_ref if use_ref else (
+        lambda *a: leaf_search_planes(*a, interpret=interpret))
+    oh, ol, found = fn(rows, qh, ql, kh, kl, ph, pl_)
+    return join_u64(np.asarray(oh), np.asarray(ol)), np.asarray(found)

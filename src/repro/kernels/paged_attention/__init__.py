@@ -1,0 +1,3 @@
+from .ops import paged_attention
+
+__all__ = ["paged_attention"]

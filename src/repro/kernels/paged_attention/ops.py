@@ -1,0 +1,18 @@
+"""Public wrapper for the paged-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .paged_attention import paged_attention_call
+from .ref import paged_attention_ref
+
+
+def paged_attention(table, lengths, q, k_pages, v_pages, *,
+                    interpret: bool = True, use_ref: bool = False):
+    """Flash-decoding over learned-index pages. See paged_attention.py."""
+    table = jnp.asarray(table, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if use_ref:
+        return paged_attention_ref(table, lengths, q, k_pages, v_pages)
+    return paged_attention_call(table, lengths, q, k_pages, v_pages,
+                                interpret=interpret)

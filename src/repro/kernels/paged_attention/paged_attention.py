@@ -1,0 +1,108 @@
+"""Pallas kernel: flash-decoding over a learned-index paged KV cache.
+
+One decode step of GQA attention where the KV cache lives in a global paged
+pool (continuous batching + prefix sharing make the logical->physical page
+space sparse; the page table rows are produced by the batched AULID lookup —
+``repro.serving.kv_cache``).  This is the paper's "predict -> fetch one
+block -> use it" loop with the attention math fused behind the fetch:
+
+* page table as **scalar prefetch**: the k/v BlockSpec index_map is
+  ``table[b, p]``, so each grid step DMAs exactly one (page_size, Hkv, Dh)
+  KV tile out of HBM — a learned-index-addressed block fetch;
+* online softmax across the page grid axis (running max / denominator in
+  VMEM scratch), i.e. flash-decoding: no (B, S) logits ever materialize;
+* the grid's minor axis walks pages sequentially, so Pallas double-buffers
+  the next page's DMA behind the current page's VPU/MXU work.
+
+VMEM per step: one KV tile (page 64 x Hkv 8 x Dh 128 x 2 x 4 B = 512 KB at
+the default geometry) + (H, Dh) accumulators — comfortably in budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(table_ref, lens_ref,              # scalar prefetch
+            q_ref,                             # (1, H, Dh)
+            k_ref, v_ref,                      # (1, page, Hkv, Dh)
+            o_ref,                             # (1, H, Dh)
+            acc_ref, m_ref, l_ref,             # VMEM scratch
+            *, n_pages: int, page_size: int, n_kv: int, groups: int,
+            head_dim: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32).reshape(n_kv, groups, head_dim)
+    k = k_ref[0].astype(jnp.float32)           # (page, hk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+    logits = jnp.einsum("kgd,pkd->kgp", q, k) * scale   # (hk, g, page)
+
+    token = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    mask = token < lens_ref[b]
+    logits = jnp.where(mask[None, None, :], logits, -1e30)
+
+    m_old = m_ref[...].reshape(n_kv, groups)
+    m_new = jnp.maximum(m_old, jnp.max(logits, axis=-1))
+    alpha = jnp.exp(m_old - m_new)
+    probs = jnp.exp(logits - m_new[..., None])
+    l_new = alpha * l_ref[...].reshape(n_kv, groups) + jnp.sum(probs, axis=-1)
+    acc_old = acc_ref[...].reshape(n_kv, groups, head_dim)
+    acc_new = (alpha[..., None] * acc_old
+               + jnp.einsum("kgp,pkd->kgd", probs, v))
+    m_ref[...] = m_new.reshape(m_ref.shape)
+    l_ref[...] = l_new.reshape(l_ref.shape)
+    acc_ref[...] = acc_new.reshape(acc_ref.shape)
+
+    @pl.when(p == n_pages - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...].reshape(n_kv, groups), 1e-30)
+        out = acc_ref[...].reshape(n_kv, groups, head_dim) / denom[..., None]
+        o_ref[0] = out.reshape(n_kv * groups, head_dim).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_call(table: jnp.ndarray, lengths: jnp.ndarray,
+                         q: jnp.ndarray, k_pages: jnp.ndarray,
+                         v_pages: jnp.ndarray, *, interpret: bool = True):
+    """table (B, NP) i32 physical page ids; lengths (B,) i32;
+    q (B, H, Dh); k/v pages (P, page_size, Hkv, Dh).
+    Returns (B, H, Dh) attention output."""
+    B, H, Dh = q.shape
+    P, page_size, n_kv, _ = k_pages.shape
+    NP = table.shape[1]
+    groups = H // n_kv
+    kernel = functools.partial(_kernel, n_pages=NP, page_size=page_size,
+                               n_kv=n_kv, groups=groups, head_dim=Dh)
+    qspec = pl.BlockSpec((1, H, Dh), lambda b, p, table, lens: (b, 0, 0))
+    kvspec = pl.BlockSpec((1, page_size, n_kv, Dh),
+                          lambda b, p, table, lens: (table[b, p], 0, 0, 0))
+    ospec = pl.BlockSpec((1, H, Dh), lambda b, p, table, lens: (b, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, NP),
+            in_specs=[qspec, kvspec, kvspec],
+            out_specs=ospec,
+            scratch_shapes=[
+                pltpu.VMEM((n_kv * groups, Dh), jnp.float32),
+                pltpu.VMEM((n_kv * groups, 1), jnp.float32),
+                pltpu.VMEM((n_kv * groups, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        interpret=interpret,
+    )(table, lengths, q, k_pages, v_pages)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for paged_attention (gather pages, full softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(table, lengths, q, k_pages, v_pages):
+    B, H, Dh = q.shape
+    P, page, n_kv, _ = k_pages.shape
+    NP = table.shape[1]
+    g = H // n_kv
+    k = jnp.take(k_pages, table.reshape(-1), axis=0).reshape(
+        B, NP * page, n_kv, Dh).astype(jnp.float32)
+    v = jnp.take(v_pages, table.reshape(-1), axis=0).reshape(
+        B, NP * page, n_kv, Dh).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, n_kv, g, Dh)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k) / jnp.sqrt(jnp.float32(Dh))
+    mask = jnp.arange(NP * page)[None, :] < lengths[:, None]
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return out.reshape(B, H, Dh).astype(q.dtype)

@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, step functions, dry-run, train/serve CLIs."""

@@ -1,0 +1,144 @@
+"""Post-partitioning HLO analysis: collective bytes + roofline terms.
+
+The SPMD partitioner emits a *per-device* module, so every shape in
+``compiled.as_text()`` is a per-device shape; the byte counts below are
+per-device, which is exactly the currency of the roofline terms
+(per-device work / per-device peak == global work / (chips * peak) for an
+evenly sharded program).
+
+Ring-factor convention (documented in EXPERIMENTS.md): an all-reduce of R
+result bytes moves ~2R on the wire (reduce-scatter + all-gather phases);
+all-gather / reduce-scatter / all-to-all / collective-permute move ~R.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~per-chip injection, 1 link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(pred|[sufbc]\d+|bf16)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES.get(dt, 4))
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind (ring-factor applied)."""
+    out: dict[str, float] = {"all-reduce": 0, "all-gather": 0,
+                             "reduce-scatter": 0, "all-to-all": 0,
+                             "collective-permute": 0}
+    counts: dict[str, int] = {k: 0 for k in out}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        b = _type_bytes(type_str)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += b * factor
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": float(sum(out.values()))}
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-device roofline terms, in seconds."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float              # per-device HLO flops
+    hbm_bytes: float          # per-device HLO bytes accessed
+    coll_bytes: float         # per-device collective wire bytes
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+        }
+
+
+def cost_props(compiled) -> dict:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def roofline_from_compiled(compiled, hlo_text: str | None = None) -> Roofline:
+    props = cost_props(compiled)
+    flops = float(props.get("flops", 0.0))
+    hbm = float(props.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)["total_bytes"]
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll / ICI_BW,
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for a train step;
+    2*N*D for one forward-only token batch (prefill/decode)."""
+    from ..models.model import param_specs
+    from ..models.transformer import n_attn_layers
+
+    n_params = 0
+    n_routed = 0
+
+    def count(s):
+        nonlocal n_params, n_routed
+        n = 1
+        for d in s.shape:
+            n *= d
+        n_params += n
+
+    import jax
+    specs = param_specs(cfg)
+    jax.tree.map(count, specs, is_leaf=lambda x: hasattr(x, "axes"))
+    n_active = n_params
+    if cfg.n_experts and cfg.top_k:
+        # routed expert params counted at top_k/n_experts utilization
+        per_layer = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts
+        routed_total = per_layer * cfg.n_layers
+        n_active = n_params - routed_total * (1 - cfg.top_k / cfg.n_experts)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind in
+                                   ("train", "prefill") else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,85 @@
+"""Step functions (train / prefill / decode) and their sharding trees.
+
+These are the units the dry-run lowers and the launchers execute. All state
+(params, optimizer moments, KV caches, SSM states) is donated so a step is
+in-place on device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from ..optim import (AdamWConfig, adamw_update, clip_by_global_norm)
+from ..parallel.sharding import ACT_RULES, PARAM_RULES, spec_for
+
+
+def shardings_for(spec_tree, mesh, *, params: bool):
+    """Spec tree -> NamedSharding tree (PARAM_RULES or ACT_RULES)."""
+    rules = PARAM_RULES if params else ACT_RULES
+
+    def one(s: M.Spec):
+        return NamedSharding(mesh, spec_for(s.shape, s.axes, mesh, rules))
+
+    return jax.tree.map(one, spec_tree, is_leaf=lambda x: isinstance(x, M.Spec))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, PartitionSpec())
+
+
+# ------------------------------------------------------------------ train
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+        # Pin the gradient cross-replica reduction to the grads' own dtype:
+        # without the barrier XLA hoists the optimizer's f32 upcast above the
+        # all-reduce, doubling sync bytes for bf16-param configs (§Perf).
+        grads = jax.lax.optimization_barrier(grads)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state, lr = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, gnorm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_cell_specs(cfg: ModelConfig, shape) -> tuple:
+    """(param_specs, opt_specs, batch_specs) Spec trees for one train cell."""
+    pspecs = M.param_specs(cfg)
+    from ..optim.adamw import opt_state_specs
+    ospecs = opt_state_specs(pspecs, M.Spec)
+    bspecs = M.input_specs(cfg, shape)
+    return pspecs, ospecs, bspecs
+
+
+# ------------------------------------------------------------------ prefill
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return M.prefill(cfg, params, batch, cache)
+
+    return prefill_step
+
+
+# ------------------------------------------------------------------- decode
+
+def make_decode_step(cfg: ModelConfig):
+    has_cache = len(M.cache_specs(cfg, 1, 8)) > 0
+    has_state = len(M.state_specs(cfg, 1)) > 0
+
+    def decode_one(params, tokens, pos, cache, state):
+        logits, nxt, cache, state = M.decode_step(
+            cfg, params, tokens, pos,
+            cache if has_cache else None, state if has_state else None)
+        return logits, nxt, (cache if has_cache else {}), (state if has_state else {})
+
+    return decode_one

@@ -1,0 +1,275 @@
+"""Attention: GQA with qk-norm / bias / softcap / sliding-window / cross-attn,
+in three execution modes: full (train/prefill), decode (one new token against
+a KV cache), and cross (keys/values from a frontend-stub memory).
+
+Sliding-window (gemma2 local layers) is branchless: the window only narrows
+the mask, so local and global layers share one code path and the per-layer
+local/global flag can be a traced scalar inside the layer scan.
+
+KV caches support int8 quantization (per-position, per-head scales) for the
+configs whose bf16 cache would not fit HBM (DESIGN.md §6). Shapes:
+  x            (B, S, D)
+  cache k/v    (A, B, S_max, Hkv, Dh)  [+ scales (A, B, S_max, Hkv) when int8]
+where A is the number of attention layers (the stacked-layer scan indexes it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import shard_acts
+from .common import apply_rope, rms_norm, softcap
+
+
+def attn_param_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    """name -> (shape, logical_axes)."""
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    p = {
+        "wq": ((d, h * dh), ("embed", "heads")),
+        "wk": ((d, hk * dh), ("embed", "kv_heads")),
+        "wv": ((d, hk * dh), ("embed", "kv_heads")),
+        "wo": ((h * dh, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p.update({"bq": ((h * dh,), ("heads",)),
+                  "bk": ((hk * dh,), ("kv_heads",)),
+                  "bv": ((hk * dh,), ("kv_heads",))})
+    if cfg.qk_norm:
+        p.update({"q_norm": ((dh,), (None,)), "k_norm": ((dh,), (None,))})
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                 kv_src: Optional[jnp.ndarray] = None):
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    src = x if kv_src is None else kv_src
+    q = x @ p["wq"].astype(x.dtype)
+    k = src @ p["wk"].astype(x.dtype)
+    v = src @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(*x.shape[:-1], h, dh)
+    k = k.reshape(*src.shape[:-1], hk, dh)
+    v = v.reshape(*src.shape[:-1], hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask) -> jnp.ndarray:
+    """q (B,Sq,H,Dh), k/v (B,Sk,Hkv,Dh); GQA via head grouping."""
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hk
+    B, Sq = q.shape[0], q.shape[1]
+    q = q.reshape(B, Sq, hk, g, dh)
+    # bf16-out einsum + explicit f32 upcast (not preferred_element_type=f32):
+    # the MXU still accumulates in f32 internally, but the COTANGENTS of the
+    # einsum stay bf16, halving the attention backward's reshard/reduce bytes
+    # (§Perf cell 2). The f32 path beyond the cast is unchanged.
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(dh))
+    logits = softcap(logits, cfg.attn_softcap)
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, h * dh)
+
+
+def _q_chunk(cfg: ModelConfig, S: int) -> int:
+    """Query-chunk size: 0 = no chunking."""
+    if cfg.attn_q_chunk < 0:
+        return 0
+    if cfg.attn_q_chunk > 0:
+        return min(cfg.attn_q_chunk, S)
+    return S // 16 if S > 8192 else 0  # auto: bound logits to S^2/16
+
+
+def _causal_mask(cfg: ModelConfig, rows: jnp.ndarray, S: int, sliding_flag):
+    """(R, S) mask for global query-row indices ``rows``."""
+    i = rows[:, None]
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
+    mask = j <= i
+    if cfg.sliding_window:
+        local = mask & (j > i - cfg.sliding_window)
+        flag = jnp.asarray(sliding_flag, dtype=bool)
+        mask = jnp.where(flag, local, mask)
+    return mask
+
+
+def full_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                   positions: jnp.ndarray, sliding_flag=False):
+    """Causal self-attention over the whole sequence (train/prefill).
+
+    ``sliding_flag`` may be a traced bool (per-layer, inside the scan).
+    Long sequences are processed in query chunks: each chunk's rows get their
+    complete softmax over the full key prefix, so chunking is EXACT while the
+    materialized logits shrink from S^2 to chunk*S (the flash-attention
+    memory insight, without needing an online softmax because the key axis
+    stays whole). Returns (out, k, v) so prefill can populate the KV cache."""
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    B, S = x.shape[0], x.shape[1]
+    C = _q_chunk(cfg, S)
+    if C == 0 or S % C != 0 or C >= S:
+        if cfg.attn_seq_shard:
+            # Sq-sharded attention: q rows stay on their seq shard; k/v are
+            # gathered (bf16) so logits+softmax are fully shard-local. Only
+            # in the unchunked path: combined with the q-chunk reshape these
+            # constraints force involuntary resharding (measured 6x memory
+            # regression on prefill_32k — see EXPERIMENTS §Perf cell 2).
+            q = shard_acts(q, "batch", "seq", None, None)
+            k = shard_acts(k, "batch", None, None, None)
+            v = shard_acts(v, "batch", None, None, None)
+        mask = _causal_mask(cfg, jnp.arange(S, dtype=jnp.int32), S, sliding_flag)
+        out = _sdpa(cfg, q, k, v, mask[None, None, None])
+        if cfg.attn_seq_shard:
+            out = shard_acts(out, "batch", "seq", None)
+        return out @ p["wo"].astype(x.dtype), k, v
+
+    nC = S // C
+    h, dh = cfg.n_heads, cfg.head_dim_
+    qc = jnp.moveaxis(q.reshape(B, nC, C, h, dh), 1, 0)   # (nC,B,C,h,dh)
+    offs = jnp.arange(nC, dtype=jnp.int32) * C
+
+    def chunk(qi, off):
+        rows = off + jnp.arange(C, dtype=jnp.int32)
+        mask = _causal_mask(cfg, rows, S, sliding_flag)
+        return _sdpa(cfg, qi, k, v, mask[None, None, None])  # (B,C,h*dh)
+
+    if cfg.scan_unroll:  # cost-probe mode: no while loops anywhere
+        outs = [chunk(qc[i], offs[i]) for i in range(nC)]
+        out = jnp.stack(outs)                                 # (nC,B,C,h*dh)
+    else:
+        _, out = jax.lax.scan(lambda c, xs: (c, chunk(*xs)), 0, (qc, offs))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, h * dh)
+    return out @ p["wo"].astype(x.dtype), k, v
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                    memory: Optional[jnp.ndarray] = None,
+                    kv: Optional[tuple] = None) -> jnp.ndarray:
+    """Cross-attention against frontend-stub memory (B, P, D) — no mask/rope.
+
+    Either ``memory`` (project k/v here: train/prefill) or precomputed ``kv``
+    from the cross cache (decode)."""
+    if kv is None:
+        q, k, v = _project_qkv(cfg, p, x, kv_src=memory)
+    else:
+        h, dh = cfg.n_heads, cfg.head_dim_
+        q = x @ p["wq"].astype(x.dtype)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(x.dtype)
+        q = q.reshape(*x.shape[:-1], h, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k, v = kv
+    out = _sdpa(cfg, q, k.astype(x.dtype), v.astype(x.dtype), None)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def cross_kv(cfg: ModelConfig, p: dict, memory: jnp.ndarray):
+    """Precompute the cross-attention k/v for one layer (prefill -> cache)."""
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    k = memory @ p["wk"].astype(memory.dtype)
+    v = memory @ p["wv"].astype(memory.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(memory.dtype)
+        v = v + p["bv"].astype(memory.dtype)
+    k = k.reshape(*memory.shape[:-1], hk, dh)
+    v = v.reshape(*memory.shape[:-1], hk, dh)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ------------------------------------------------------------- KV cache utils
+
+CACHE_AXES = ("layers", "kv_batch", "kv_seq", "kv_heads", None)
+SCALE_AXES = ("layers", "kv_batch", "kv_seq", "kv_heads")
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, s_max: int, n_attn: int) -> dict:
+    """name -> (shape, dtype, logical_axes) for one attention stack's cache."""
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    base = (n_attn, batch, s_max, hk, dh)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": (base, "int8", CACHE_AXES), "v": (base, "int8", CACHE_AXES),
+                "k_scale": ((n_attn, batch, s_max, hk), "float32", SCALE_AXES),
+                "v_scale": ((n_attn, batch, s_max, hk), "float32", SCALE_AXES)}
+    return {"k": (base, cfg.kv_cache_dtype, CACHE_AXES),
+            "v": (base, cfg.kv_cache_dtype, CACHE_AXES)}
+
+
+def _quant(x: jnp.ndarray):
+    """Symmetric int8 over the last axis; x (..., Dh) -> (q int8, scale f32)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+def write_cache_prefill(cfg: ModelConfig, cache: dict, layer, k, v) -> dict:
+    """Write a (B,S,Hk,Dh) prefill k/v at stacked-cache row ``layer``.
+    The prompt may be shorter than the cache (S <= S_max)."""
+    cache = dict(cache)
+    S = k.shape[1]
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quant(k)
+        vq, vs = _quant(v)
+        cache["k"] = cache["k"].at[layer, :, :S].set(kq)
+        cache["v"] = cache["v"].at[layer, :, :S].set(vq)
+        cache["k_scale"] = cache["k_scale"].at[layer, :, :S].set(ks)
+        cache["v_scale"] = cache["v_scale"].at[layer, :, :S].set(vs)
+    else:
+        cache["k"] = cache["k"].at[layer, :, :S].set(k.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[layer, :, :S].set(v.astype(cache["v"].dtype))
+    return cache
+
+
+def decode_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray, cache: dict,
+                     layer, pos: jnp.ndarray, sliding_flag=False):
+    """One-token decode: update the cache at ``pos`` and attend over it.
+
+    x (B,1,D); cache arrays as in kv_cache_specs; pos (B,) int32; ``layer``
+    may be a traced index (the stacked-layer scan counter)."""
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    B = x.shape[0]
+    bidx = jnp.arange(B)
+    cache = dict(cache)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quant(k)
+        vq, vs = _quant(v)
+        cache["k"] = cache["k"].at[layer, bidx, pos].set(kq[:, 0])
+        cache["v"] = cache["v"].at[layer, bidx, pos].set(vq[:, 0])
+        cache["k_scale"] = cache["k_scale"].at[layer, bidx, pos].set(ks[:, 0])
+        cache["v_scale"] = cache["v_scale"].at[layer, bidx, pos].set(vs[:, 0])
+        kf = (cache["k"][layer].astype(jnp.float32)
+              * cache["k_scale"][layer][..., None]).astype(x.dtype)
+        vf = (cache["v"][layer].astype(jnp.float32)
+              * cache["v_scale"][layer][..., None]).astype(x.dtype)
+    else:
+        cache["k"] = cache["k"].at[layer, bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[layer, bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
+        kf = cache["k"][layer].astype(x.dtype)
+        vf = cache["v"][layer].astype(x.dtype)
+    kf = shard_acts(kf, "kv_batch", "kv_seq", "kv_heads", None)
+    vf = shard_acts(vf, "kv_batch", "kv_seq", "kv_heads", None)
+    S = kf.shape[1]
+    j = jnp.arange(S)[None, :]
+    mask = j <= pos[:, None]
+    if cfg.sliding_window:
+        local = mask & (j > pos[:, None] - cfg.sliding_window)
+        flag = jnp.asarray(sliding_flag, dtype=bool)
+        mask = jnp.where(flag, local, mask)
+    out = _sdpa(cfg, q, kf, vf, mask[:, None, None, None, :])
+    return out @ p["wo"].astype(x.dtype), cache

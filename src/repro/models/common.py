@@ -1,0 +1,78 @@
+"""Shared layer primitives (explicit dtypes everywhere — the AULID lookup
+path enables global x64, so model code never relies on default dtypes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16, "int8": jnp.int8}[name]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                               # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+@jax.custom_vjp
+def cotangent_cast(x: jnp.ndarray) -> jnp.ndarray:
+    """Identity forward; backward casts the cotangent to x's dtype.
+
+    The f32 loss cotangent otherwise propagates through every matmul
+    transpose (f32 x bf16 -> f32) and keeps the WHOLE backward residual
+    stream in f32 — doubling every gradient reshard/reduce on the wire
+    (§Perf cell 2). Placed at the lm-head and embedding boundaries."""
+    return x
+
+
+def _ct_fwd(x):
+    return x, jnp.zeros((), x.dtype)  # dtype token (custom_vjp res must be jax types)
+
+
+def _ct_bwd(token, g):
+    return (g.astype(token.dtype),)
+
+
+cotangent_cast.defvjp(_ct_fwd, _ct_bwd)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  softcap_val: float = 0.0) -> jnp.ndarray:
+    """Mean next-token loss; logits (B,S,V) f32, labels (B,S) int32 (-1 pad)."""
+    logits = softcap(logits.astype(jnp.float32), softcap_val)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,21 @@
+"""Dense FFN (SwiGLU / GeLU-MLP) used by all transformer archs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import act_fn
+
+
+def mlp_param_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    """name -> (shape, logical_axes)."""
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {"w_gate": ((d, f), ("embed", "mlp")),
+            "w_up": ((d, f), ("embed", "mlp")),
+            "w_down": ((f, d), ("mlp", "embed"))}
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    a = act_fn(cfg.act)
+    h = a(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)

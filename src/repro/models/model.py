@@ -1,0 +1,283 @@
+"""Model assembly: parameter specs/init, train forward + loss, prefill and
+decode steps, and the ShapeDtypeStruct input specs used by the dry-run.
+
+Every tensor (params, optimizer state, activations, caches) carries logical
+sharding axes; ``repro.parallel.sharding`` resolves them against whatever
+mesh is installed, so the same model code runs on 1 CPU device (tests), a
+256-chip pod, or the 512-chip multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, SHAPES, ShapeConfig
+from ..parallel.sharding import shard_acts
+from .attention import kv_cache_specs
+from .common import (cotangent_cast, cross_entropy, dtype_of, rms_norm,
+                     softcap)
+from .mamba2 import mamba_state_specs
+from .rwkv6 import rwkv_state_specs
+from .transformer import (extra_param_specs, layer_param_specs, n_attn_layers,
+                          n_cross_layers, stack_decode, stack_forward)
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Shape + dtype + logical axes for one tensor."""
+    shape: tuple
+    dtype: str
+    axes: tuple
+
+    @property
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, dtype_of(self.dtype)
+                                    if self.dtype in ("float32", "bfloat16",
+                                                      "float16", "int8")
+                                    else jnp.dtype(self.dtype))
+
+
+def _is_spec_pair(x) -> bool:
+    return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """Full parameter pytree of Spec leaves (layer params stacked over L)."""
+    d, v = cfg.d_model, cfg.vocab_size
+    dt = cfg.param_dtype
+    out: dict = {}
+    # The embed table is always present: the audio stub feeds precomputed
+    # frame embeddings at train/prefill, but decode embeds its own generated
+    # EnCodec ids (vocab 2048 -> a tiny table).
+    out["embed"] = Spec((v, d), dt, ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Spec((d, v), dt, ("embed", "vocab"))
+    out["final_norm"] = Spec((d,), dt, (None,))
+
+    L = cfg.n_layers
+
+    def stack(pair):
+        shape, axes = pair
+        return Spec((L,) + tuple(shape), dt, ("layers",) + tuple(axes))
+
+    out["layers"] = jax.tree.map(stack, layer_param_specs(cfg),
+                                 is_leaf=_is_spec_pair)
+
+    def plain(pair):
+        shape, axes = pair
+        return Spec(tuple(shape), dt, tuple(axes))
+
+    extras = extra_param_specs(cfg)
+    if extras:
+        out["extras"] = jax.tree.map(plain, extras, is_leaf=_is_spec_pair)
+    return out
+
+
+def _init_leaf(key, spec: Spec, path: str) -> jnp.ndarray:
+    dt = dtype_of(spec.dtype)
+    # keystr paths look like "['layers']['tm']['mix_r']": take the last key
+    import re
+    segs = re.findall(r"\['([^']+)'\]", path)
+    name = segs[-1] if segs else path
+    # 1-D params: norm scales start at 0 (rms uses 1+scale); biases at 0.
+    if len(spec.shape) <= 1 or name.startswith(("b", "mix", "cmix")):
+        if name == "A_log":  # mamba: A in [-16, -1]
+            return jnp.log(jnp.linspace(1.0, 16.0, spec.shape[-1], dtype=jnp.float32)
+                           ).astype(dt) * jnp.ones(spec.shape, dt)
+        if name == "w_base":  # rwkv decay base: exp(-exp(-2)) ~ 0.87
+            return jnp.full(spec.shape, -2.0, dt)
+        if name in ("D", "u"):
+            return jnp.full(spec.shape, 0.5, dt)
+        if name.startswith(("mix", "cmix")):
+            return jnp.full(spec.shape, 0.5, dt)
+        return jnp.zeros(spec.shape, dt)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[0]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dt)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten_with_path(specs,
+                                                 is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, spec, jax.tree_util.keystr(p))
+            for k, (p, spec) in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_tree_to_sds(specs) -> dict:
+    return jax.tree.map(lambda s: s.sds, specs,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+# ------------------------------------------------------------------ caches
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    """KV cache (+ cross k/v) Spec tree for decode/prefill."""
+    out: dict = {}
+    na = n_attn_layers(cfg)
+    if na:
+        for k, (shape, dtype, axes) in kv_cache_specs(cfg, batch, s_max, na).items():
+            out[k] = Spec(tuple(shape), dtype, tuple(axes))
+    nc = n_cross_layers(cfg)
+    if nc:
+        hk, dh = cfg.n_kv_heads, cfg.head_dim_
+        shape = (nc, batch, cfg.n_patches, hk, dh)
+        axes = ("layers", "kv_batch", None, "kv_heads", None)
+        out["xk"] = Spec(shape, cfg.compute_dtype, axes)
+        out["xv"] = Spec(shape, cfg.compute_dtype, axes)
+    return out
+
+
+def state_specs(cfg: ModelConfig, batch: int) -> dict:
+    """Recurrent state Spec tree (SSM / hybrid / rwkv)."""
+    out: dict = {}
+    if cfg.family == "hybrid":
+        raw = mamba_state_specs(cfg, batch, cfg.n_layers)
+        axes = {"ssm": ("layers", "kv_batch", "ssm_heads", None, None),
+                "conv": ("layers", "kv_batch", None, None)}
+        for k, (shape, dtype) in raw.items():
+            out[k] = Spec(tuple(shape), dtype, axes[k])
+    elif cfg.family == "ssm":
+        raw = rwkv_state_specs(cfg, batch, cfg.n_layers)
+        axes = {"wkv": ("layers", "kv_batch", "ssm_heads", None, None),
+                "tshift_t": ("layers", "kv_batch", None),
+                "tshift_c": ("layers", "kv_batch", None)}
+        for k, (shape, dtype) in raw.items():
+            out[k] = Spec(tuple(shape), dtype, axes[k])
+    return out
+
+
+def init_zeros(specs: dict) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, dtype_of(s.dtype)), specs,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+# ------------------------------------------------------------------ forward
+
+def _embed_in(cfg: ModelConfig, params: dict, batch: dict) -> jnp.ndarray:
+    cdt = dtype_of(cfg.compute_dtype)
+    if cfg.frontend_stub and cfg.family == "audio":
+        x = batch["frames"].astype(cdt)          # (B,S,D) precomputed embeddings
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    x = cotangent_cast(x)  # embed-table grads accumulate in the compute dtype
+    return shard_acts(x, "batch", "seq", None)
+
+
+def _head(cfg: ModelConfig, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    x = cotangent_cast(x)  # keep the backward residual stream in bf16
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            cache: Optional[dict] = None):
+    """Full-sequence forward. Returns (hidden (B,S,D), aux, cache)."""
+    x = _embed_in(cfg, params, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    memory = batch.get("patches")
+    if memory is not None:
+        memory = memory.astype(x.dtype)
+    x, aux, cache = stack_forward(cfg, params["layers"], x, positions,
+                                  extras=params.get("extras"), memory=memory,
+                                  cache=cache)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, cache
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    """Mean next-token loss (+ MoE aux). The step functions grad this."""
+    x, aux, _ = forward(cfg, params, batch)
+    logits = _head(cfg, params, x)
+    logits = shard_acts(logits, "batch", "seq", None)
+    loss = cross_entropy(logits, batch["labels"])
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss, {"loss": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache: dict):
+    """Fill the KV cache from a full prompt; logits for the LAST position only
+    (the lm_head matmul is S-times cheaper than in training — the slice
+    happens before the projection, not after)."""
+    x, _, cache = forward(cfg, params, batch, cache=cache)
+    logits = _head(cfg, params, x[:, -1:])
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cache: Optional[dict],
+                state: Optional[dict]):
+    """One decode step. tokens (B,1) i32, pos (B,) i32.
+
+    Returns (logits (B,V) f32, next_token (B,) i32, cache, state)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    x = shard_acts(x, "batch", None, None)
+    x, cache, state = stack_decode(cfg, params["layers"], x, pos,
+                                   extras=params.get("extras"),
+                                   cache=cache, state=state)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head(cfg, params, x)[:, 0]
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return logits, next_tok, cache, state
+
+
+# --------------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> dict:
+    """Spec tree for every *data* input of the step the shape exercises.
+
+    train:   tokens/frames + labels (+ patches for vlm)
+    prefill: tokens/frames (+ patches) + zero cache to fill
+    decode:  tokens (B,1) + pos + cache/state of seq_len context
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    specs: dict = {}
+    audio_stub = cfg.frontend_stub and cfg.family == "audio"
+
+    if shape.kind == "train":
+        if audio_stub:
+            specs["frames"] = Spec((B, S, d), cfg.compute_dtype,
+                                   ("batch", None, None))
+        else:
+            specs["tokens"] = Spec((B, S), "int32", ("batch", None))
+        specs["labels"] = Spec((B, S), "int32", ("batch", None))
+        if cfg.cross_attn_period:
+            specs["patches"] = Spec((B, cfg.n_patches, d), cfg.compute_dtype,
+                                    ("batch", None, None))
+        return specs
+
+    if shape.kind == "prefill":
+        if audio_stub:
+            specs["frames"] = Spec((B, S, d), cfg.compute_dtype,
+                                   ("batch", None, None))
+        else:
+            specs["tokens"] = Spec((B, S), "int32", ("batch", None))
+        if cfg.cross_attn_period:
+            specs["patches"] = Spec((B, cfg.n_patches, d), cfg.compute_dtype,
+                                    ("batch", None, None))
+        specs["cache"] = cache_specs(cfg, B, S)
+        return specs
+
+    # decode / long_decode: one new token against a seq_len-deep context
+    specs["tokens"] = Spec((B, 1), "int32", ("batch", None))
+    specs["pos"] = Spec((B,), "int32", ("batch",))
+    specs["cache"] = cache_specs(cfg, B, S)
+    specs["state"] = state_specs(cfg, B)
+    return specs

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch is expressed with argsort + scatter (no (T,E,C) one-hot tensors) so
+it compiles at full scale and lets GSPMD insert the canonical EP all-to-alls:
+tokens are sharded on batch ('data'), expert weights & buffers on experts
+('model'). Overflow beyond each expert's capacity is dropped (standard
+capacity-factor semantics); an aux load-balancing loss is returned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import shard_acts
+from .common import act_fn
+from .mlp import mlp, mlp_param_specs
+
+
+def moe_param_specs(cfg: ModelConfig) -> dict:
+    """name -> (shape, logical_axes). Experts shard over 'model' (EP)."""
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    # 'mlp' on the f dim is the fallback TP axis: when n_experts does not
+    # divide the model axis (qwen2-moe: 60 experts vs 16), EP is infeasible
+    # and the per-expert FFN shards over d_ff instead.
+    p = {
+        "router": ((d, e), ("embed", None)),
+        "we_gate": ((e, d, f), ("experts", "embed", "mlp")),
+        "we_up": ((e, d, f), ("experts", "embed", "mlp")),
+        "we_down": ((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p.update({f"shared_{k}": v for k, v in
+                  mlp_param_specs(cfg, cfg.n_shared_experts * cfg.d_ff).items()})
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch_groups(B: int) -> int:
+    """Shard-local dispatch group count = the mesh's DP extent (if any)."""
+    from ..parallel.sharding import get_context
+    ctx = get_context()
+    if ctx is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data", "model"):
+        if ax in ctx.mesh.axis_names:
+            g *= ctx.mesh.shape[ax]
+    while g > 1 and B % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Distribution (§Perf iteration 2): the dispatch is HIERARCHICAL — tokens
+    are grouped by their DP shard (leading G axis sharded over ('pod',
+    'data')) and each group scatters into its OWN (E, C/G) slice of the
+    expert buffers, so every scatter/gather index is shard-local by
+    construction and GSPMD never replicates the (E*C, D) buffer (21 TB
+    global at train_4k before this change; iteration 1 showed that merely
+    annotating the flat buffer makes GSPMD replicate around the scatter).
+    Per-group capacity C/G is the standard EP semantics. The aux load term
+    uses a scatter-add instead of a (T,K,E) one-hot (1 TB at T=1M, E=60)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = _dispatch_groups(B)
+    TL = T // G                                       # tokens per group
+    xt = shard_acts(x.reshape(G, TL, D), "moe_group", None, None)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G,TL,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, gate_i = jax.lax.top_k(probs, K)                          # (G,TL,K)
+    gate_v = gate_v / jnp.sum(gate_v, axis=-1, keepdims=True)
+
+    # ---- group-local sort-based dispatch (Megatron-style) ----------------
+    C = max(_capacity(cfg, T) // G, 4)
+    fe = gate_i.reshape(G, TL * K)                   # flat expert ids
+    fw = gate_v.reshape(G, TL * K)
+    ft = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(TL, dtype=jnp.int32), K)[None], (G, TL * K))
+    order = jnp.argsort(fe, axis=-1, stable=True)
+    se = jnp.take_along_axis(fe, order, axis=-1)
+    st = jnp.take_along_axis(ft, order, axis=-1)
+    sw = jnp.take_along_axis(fw, order, axis=-1)
+    # position of each routed token within its expert's per-group queue
+    start = jax.vmap(lambda s: jnp.searchsorted(s, jnp.arange(E),
+                                                side="left"))(se)
+    pos_in_e = (jnp.arange(TL * K, dtype=jnp.int32)[None]
+                - jnp.take_along_axis(start, se, axis=-1))
+    keep = pos_in_e < C
+    dst = jnp.where(keep, se * C + pos_in_e, E * C)  # E*C = drop bin
+    src = jnp.take_along_axis(xt, st[..., None], axis=1)       # (G,TL*K,D)
+    buf = jnp.zeros((G, E * C + 1, D), dtype=x.dtype)
+    buf = jax.vmap(lambda b, d, s: b.at[d].set(s))(buf, dst, src)
+    buf = buf[:, : E * C].reshape(G, E, C, D)
+    buf = shard_acts(buf, "moe_group", "experts", None, None)
+
+    # ---- expert FFN (E over 'model' when divisible, else f over 'model')
+    a = act_fn(cfg.act)
+    h = a(jnp.einsum("gecd,edf->gecf", buf, p["we_gate"].astype(x.dtype))) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["we_up"].astype(x.dtype))
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["we_down"].astype(x.dtype))
+    out_e = shard_acts(out_e, "moe_group", "experts", None, None)
+
+    # ---- group-local combine ---------------------------------------------
+    flat = out_e.reshape(G, E * C, D)
+    safe = jnp.minimum(dst, E * C - 1)
+    gathered = jnp.take_along_axis(flat, safe[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    contrib = gathered * sw[..., None].astype(x.dtype)
+    yt = jax.vmap(lambda y, i, c: y.at[i].add(c))(
+        jnp.zeros((G, TL, D), dtype=x.dtype), st, contrib)
+    yt = shard_acts(yt, "moe_group", None, None)
+    y = yt.reshape(B, S, D)
+
+    # ---- aux losses --------------------------------------------------------
+    me = jnp.mean(probs, axis=(0, 1))                             # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[fe.reshape(-1)].add(1.0) / (T * K)
+    aux = jnp.sum(me * ce) * E
+
+    if cfg.n_shared_experts:
+        shared = {k[len("shared_"):]: v for k, v in p.items()
+                  if k.startswith("shared_")}
+        y = y + mlp(cfg, shared, x)
+    return y, aux

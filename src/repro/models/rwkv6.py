@@ -1,0 +1,180 @@
+"""RWKV-6 "Finch" blocks: attention-free time-mix with data-dependent decay,
+chunked-parallel for train/prefill and O(1)-state recurrent for decode.
+
+Recurrence per head (state S in R^{dk x dv}):
+    out_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+with per-channel decay w_t = exp(-exp(lw_t)) computed from the token-shifted
+input through a LoRA (the "data-dependent decay" of the paper).  The chunked
+form factorizes the decay products with exponent clamping (|log| <= 30) —
+exact up to decays < e^-30, which underflow to zero anyway.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+CHUNK = 32
+LORA = 64
+CLAMP = 30.0
+# Per-step log-decay floor: keeps |in-chunk cumulative decay| <= CLAMP so the
+# rq/kq factorization below is EXACT (no clipping ever binds). Channels at
+# the floor still decay to e^-30 ~ 1e-13 within one chunk — saturating
+# semantics, applied identically in the recurrent decode path (DESIGN.md §9).
+LOGW_FLOOR = -CLAMP / CHUNK
+
+
+def rwkv_param_specs(cfg: ModelConfig) -> dict:
+    """name -> (shape, logical_axes)."""
+    d = cfg.d_model
+    vec = ((d,), (None,))
+    return {
+        # time-mix
+        "mix_r": vec, "mix_k": vec, "mix_v": vec, "mix_w": vec, "mix_g": vec,
+        "wr": ((d, d), ("embed", "heads")), "wk": ((d, d), ("embed", "heads")),
+        "wv": ((d, d), ("embed", "heads")), "wg": ((d, d), ("embed", "heads")),
+        "wo": ((d, d), ("heads", "embed")),
+        "w_lora_a": ((d, LORA), ("embed", None)),
+        "w_lora_b": ((LORA, d), (None, None)),
+        "w_base": vec,
+        "u": vec,                      # per-channel bonus
+        "ln_x": vec,
+        # channel-mix
+        "cmix_k": vec, "cmix_r": vec,
+        "ck": ((d, cfg.d_ff), ("embed", "mlp")),
+        "cv": ((cfg.d_ff, d), ("mlp", "embed")),
+        "cr": ((d, d), ("embed", "heads")),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zeros / carried state at t=0). x (B,S,D)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, m):
+    return x + (xs - x) * m.astype(x.dtype)
+
+
+def _time_mix_inputs(cfg: ModelConfig, p: dict, x: jnp.ndarray, xs: jnp.ndarray):
+    h, dk = cfg.n_heads, cfg.d_model // cfg.n_heads
+    B, S, D = x.shape
+    r = (_mix(x, xs, p["mix_r"]) @ p["wr"].astype(x.dtype)).reshape(B, S, h, dk)
+    k = (_mix(x, xs, p["mix_k"]) @ p["wk"].astype(x.dtype)).reshape(B, S, h, dk)
+    v = (_mix(x, xs, p["mix_v"]) @ p["wv"].astype(x.dtype)).reshape(B, S, h, dk)
+    g = jax.nn.silu(_mix(x, xs, p["mix_g"]) @ p["wg"].astype(x.dtype))
+    xw = _mix(x, xs, p["mix_w"])
+    lw = p["w_base"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)).astype(jnp.float32)
+        @ p["w_lora_b"].astype(jnp.float32))
+    logw = jnp.maximum(-jnp.exp(lw), LOGW_FLOOR)         # log decay in
+    logw = logw.reshape(B, S, h, dk)                     # [LOGW_FLOOR, 0]
+    u = p["u"].astype(jnp.float32).reshape(h, dk)
+    return r, k, v, g, logw, u
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence chunked WKV6. x (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    h, dk = cfg.n_heads, D // cfg.n_heads
+    r, k, v, g, logw, u = _time_mix_inputs(cfg, p, x, _shift(x))
+    L = min(CHUNK, S)
+    nc = S // L
+    assert S % L == 0
+    rf = r.astype(jnp.float32).reshape(B, nc, L, h, dk)
+    kf = k.astype(jnp.float32).reshape(B, nc, L, h, dk)
+    vf = v.astype(jnp.float32).reshape(B, nc, L, h, dk)
+    lw = logw.reshape(B, nc, L, h, dk)
+    cw = jnp.cumsum(lw, axis=2)                          # (B,nc,L,h,dk)
+    cw_prev = cw - lw                                    # cumsum up to t-1
+    rq = rf * jnp.exp(jnp.clip(cw_prev, -CLAMP, CLAMP))
+    kq = kf * jnp.exp(jnp.clip(-cw, -CLAMP, CLAMP))
+    A = jnp.einsum("bclhd,bcshd->bchls", rq, kq)         # (B,nc,h,L,L)
+    tri = jnp.tril(jnp.ones((L, L), dtype=bool), -1)     # strict lower
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    y_intra = jnp.einsum("bchls,bcshd->bclhd", A, vf)
+    # diagonal bonus
+    y_intra = y_intra + jnp.einsum("bclhd,hd,bclhd->bclh", rf, u, kf)[..., None] * vf
+
+    # inter-chunk state scan
+    decay_all = jnp.exp(jnp.clip(cw[:, :, -1], -CLAMP, CLAMP))     # (B,nc,h,dk)
+    k_tail = kf * jnp.exp(jnp.clip(cw[:, :, -1:] - cw, -CLAMP, CLAMP))
+    contrib = jnp.einsum("bclhd,bclhe->bchde", k_tail, vf)         # (B,nc,h,dk,dv)
+
+    def scan_fn(s, inp):
+        dec, con = inp
+        return s * dec[..., None] + con, s
+
+    s0 = jnp.zeros((B, h, dk, dk), jnp.float32)
+    _, states = jax.lax.scan(scan_fn, s0,
+                             (jnp.moveaxis(decay_all, 1, 0),
+                              jnp.moveaxis(contrib, 1, 0)))
+    states = jnp.moveaxis(states, 0, 1)                            # (B,nc,h,dk,dv)
+    y_inter = jnp.einsum("bclhd,bchde->bclhe", rq, states)
+    y = (y_intra + y_inter).reshape(B, S, D)
+    # group norm over heads (ln_x)
+    yf = y.reshape(B, S, h, dk)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf**2, -1, keepdims=True) + cfg.norm_eps)
+    y = (yf.reshape(B, S, D) * (1 + p["ln_x"].astype(jnp.float32)))
+    return (y.astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    xs = _shift(x)
+    k = _mix(x, xs, p["cmix_k"]) @ p["ck"].astype(x.dtype)
+    kv = jnp.square(jax.nn.relu(k)) @ p["cv"].astype(x.dtype)
+    rg = jax.nn.sigmoid(_mix(x, xs, p["cmix_r"]) @ p["cr"].astype(x.dtype))
+    return rg * kv
+
+
+def rwkv_state_specs(cfg: ModelConfig, batch: int, n_layers: int) -> dict:
+    h, dk = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "wkv": ((n_layers, batch, h, dk, dk), "float32"),
+        "tshift_t": ((n_layers, batch, cfg.d_model), "bfloat16"),  # time-mix x_{t-1}
+        "tshift_c": ((n_layers, batch, cfg.d_model), "bfloat16"),  # channel-mix
+    }
+
+
+def rwkv_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray, state: dict,
+                layer) -> tuple[jnp.ndarray, dict]:
+    """One-token recurrent step for a full rwkv block (time+channel mix).
+    x (B,1,D). Caller handles the residual/norm wiring."""
+    B, _, D = x.shape
+    h, dk = cfg.n_heads, D // cfg.n_heads
+    prev_t = state["tshift_t"][layer][:, None].astype(x.dtype)
+    r, k, v, g, logw, u = _time_mix_inputs(cfg, p, x, prev_t)
+    rf = r.astype(jnp.float32)[:, 0]
+    kf = k.astype(jnp.float32)[:, 0]
+    vf = v.astype(jnp.float32)[:, 0]
+    w = jnp.exp(logw.astype(jnp.float32))[:, 0]                    # (B,h,dk)
+    S = state["wkv"][layer]                                        # (B,h,dk,dv)
+    out = jnp.einsum("bhd,bhde->bhe", rf, S) \
+        + jnp.einsum("bhd,hd,bhd,bhe->bhe", rf, u, kf, vf)
+    S = S * w[..., None] + jnp.einsum("bhd,bhe->bhde", kf, vf)
+    y = out.reshape(B, 1, D)
+    yf = y.reshape(B, 1, h, dk)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf**2, -1, keepdims=True) + cfg.norm_eps)
+    y = (yf.reshape(B, 1, D) * (1 + p["ln_x"].astype(jnp.float32)))
+    y = (y.astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+    state = dict(state)
+    state["wkv"] = state["wkv"].at[layer].set(S)
+    state["tshift_t"] = state["tshift_t"].at[layer].set(
+        x[:, 0].astype(state["tshift_t"].dtype))
+    return y, state
+
+
+def rwkv_channel_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray, state: dict,
+                        layer) -> tuple[jnp.ndarray, dict]:
+    prev = state["tshift_c"][layer][:, None].astype(x.dtype)
+    k = _mix(x, prev, p["cmix_k"]) @ p["ck"].astype(x.dtype)
+    kv = jnp.square(jax.nn.relu(k)) @ p["cv"].astype(x.dtype)
+    rg = jax.nn.sigmoid(_mix(x, prev, p["cmix_r"]) @ p["cr"].astype(x.dtype))
+    state = dict(state)
+    state["tshift_c"] = state["tshift_c"].at[layer].set(
+        x[:, 0].astype(state["tshift_c"].dtype))
+    return rg * kv, state

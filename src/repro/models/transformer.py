@@ -1,0 +1,325 @@
+"""Stacked-layer scan drivers for every assigned architecture family.
+
+Layer parameters are stacked with a leading (L, ...) axis and the layer loop
+is a single ``lax.scan`` (one compiled body regardless of depth — essential
+for the 512-device dry-run).  Heterogeneity inside the stack is expressed
+with per-layer flag arrays carried as scan xs:
+
+* gemma2   — ``sliding[l]``: local/global alternation is a *branchless* mask
+             selection (a window only narrows the causal mask, so both layer
+             kinds share one code path and identical FLOPs);
+* zamba2   — ``has_attn[l]`` + ``attn_idx[l]``: one *shared* attention block
+             (a single weight copy, a real lax.cond so skipped layers cost
+             nothing) interleaved every ``shared_attn_period`` Mamba2 layers;
+* vlm      — ``has_cross[l]`` + ``cross_idx[l]``: cross-attention layers with
+             their own (n_cross,)-stacked weights, dynamic-indexed per layer.
+
+``cfg.scan_unroll`` switches to a Python loop with *static* flags (no while
+loop, no conditionals). XLA's HLO cost analysis counts a while body once, so
+the dry-run lowers this unrolled variant as its cost probe; the scanned
+variant remains the deployable artifact (compile time, memory analysis).
+
+Three drivers: ``stack_forward`` (train / prefill; optionally fills a KV
+cache), ``stack_decode`` (one token against caches/states).  MoE aux loss is
+accumulated in the scan carry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import shard_acts
+from .attention import (attn_param_specs, cross_attention, cross_kv,
+                        decode_attention, full_attention, write_cache_prefill)
+from .common import rms_norm
+from .mamba2 import mamba_block, mamba_decode, mamba_param_specs
+from .mlp import mlp, mlp_param_specs
+from .moe import moe_ffn, moe_param_specs
+from .rwkv6 import (channel_mix, rwkv_channel_decode, rwkv_decode,
+                    rwkv_param_specs, time_mix)
+
+
+def _norm_spec(cfg: ModelConfig) -> tuple:
+    return ((cfg.d_model,), (None,))
+
+
+def layer_param_specs(cfg: ModelConfig) -> dict:
+    """Nested name -> (shape, logical_axes) for ONE layer (unstacked)."""
+    if cfg.family == "hybrid":
+        return {"norm": _norm_spec(cfg), "ssm": mamba_param_specs(cfg)}
+    if cfg.family == "ssm":
+        return {"ln1": _norm_spec(cfg), "ln2": _norm_spec(cfg),
+                "tm": rwkv_param_specs(cfg)}
+    # dense / moe / audio / vlm
+    p = {"ln1": _norm_spec(cfg), "attn": attn_param_specs(cfg),
+         "ln2": _norm_spec(cfg)}
+    if cfg.family == "moe":
+        p["ffn"] = moe_param_specs(cfg)
+    else:
+        p["ffn"] = mlp_param_specs(cfg)
+    if cfg.post_norm:
+        p["ln1_post"] = _norm_spec(cfg)
+        p["ln2_post"] = _norm_spec(cfg)
+    return p
+
+
+def extra_param_specs(cfg: ModelConfig) -> dict:
+    """Non-stacked extras: zamba2 shared attention, vlm cross stack."""
+    out: dict = {}
+    if cfg.shared_attn_period:
+        out["shared_attn"] = {"ln": _norm_spec(cfg), "attn": attn_param_specs(cfg)}
+    if cfg.cross_attn_period:
+        nc = n_cross_layers(cfg)
+        cross = {"ln": _norm_spec(cfg), "attn": attn_param_specs(cfg, cross=True)}
+
+        def stack(spec):
+            shape, axes = spec
+            return ((nc,) + tuple(shape), ("layers",) + tuple(axes))
+
+        out["cross"] = jax.tree.map(stack, cross,
+                                    is_leaf=lambda x: isinstance(x, tuple)
+                                    and len(x) == 2 and isinstance(x[0], tuple))
+    return out
+
+
+# ------------------------------------------------------------------ flags
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    """Rows in the self-attention KV cache stack."""
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return int(np.sum(np.arange(cfg.n_layers) % cfg.shared_attn_period == 0))
+    return cfg.n_layers
+
+
+def n_cross_layers(cfg: ModelConfig) -> int:
+    if not cfg.cross_attn_period:
+        return 0
+    return int(np.sum(np.arange(cfg.n_layers) % cfg.cross_attn_period == 0))
+
+
+def layer_flags(cfg: ModelConfig) -> dict:
+    """Static per-layer flag arrays (numpy; scan converts to device arrays)."""
+    L = cfg.n_layers
+    idx = np.arange(L, dtype=np.int32)
+    flags = {"idx": idx}
+    if cfg.local_global_period:
+        flags["sliding"] = (idx % cfg.local_global_period) == 0
+    else:
+        flags["sliding"] = np.zeros(L, dtype=bool)
+    if cfg.shared_attn_period:
+        has = (idx % cfg.shared_attn_period) == 0
+        flags["has_attn"] = has
+        flags["attn_idx"] = (np.cumsum(has) - 1).astype(np.int32)
+    if cfg.cross_attn_period:
+        has = (idx % cfg.cross_attn_period) == 0
+        flags["has_cross"] = has
+        flags["cross_idx"] = (np.cumsum(has) - 1).astype(np.int32)
+    return flags
+
+
+def _tree_at(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _maybe(pred, fn, operand, static: bool):
+    """lax.cond in scan mode; plain Python branch in unrolled probe mode."""
+    if static:
+        return fn(operand) if bool(pred) else operand
+    return jax.lax.cond(pred, fn, lambda o: o, operand)
+
+
+# ------------------------------------------------------------------ forward
+
+def stack_forward(cfg: ModelConfig, layers: dict, x: jnp.ndarray,
+                  positions: jnp.ndarray, *, extras: Optional[dict] = None,
+                  memory: Optional[jnp.ndarray] = None,
+                  cache: Optional[dict] = None):
+    """Run the full layer stack over (B,S,D). Returns (x, aux, cache).
+
+    ``cache`` not None => prefill mode: self-attention k/v (and cross k/v)
+    are written into it."""
+    extras = extras or {}
+    flags = layer_flags(cfg)
+    fill = cache is not None
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if fill and cfg.cross_attn_period:
+        # Precompute cross k/v once (memory is static for the request).
+        nc = n_cross_layers(cfg)
+        ks, vs = [], []
+        for i in range(nc):
+            k, v = cross_kv(cfg, _tree_at(extras["cross"]["attn"], i), memory)
+            ks.append(k)
+            vs.append(v)
+        cache = dict(cache)
+        cache["xk"] = jnp.stack(ks).astype(cache["xk"].dtype)
+        cache["xv"] = jnp.stack(vs).astype(cache["xv"].dtype)
+
+    def one_layer(carry, p, f, static):
+        x, aux, cache = carry
+
+        if cfg.family == "hybrid":
+            if cfg.shared_attn_period:
+                sh = extras["shared_attn"]
+
+                def do_attn(op):
+                    x, cache = op
+                    a, k, v = full_attention(cfg, sh["attn"],
+                                             rms_norm(x, sh["ln"], cfg.norm_eps),
+                                             positions)
+                    if fill:
+                        cache = write_cache_prefill(cfg, cache, f["attn_idx"], k, v)
+                    return (x + a, cache)
+
+                x, cache = _maybe(f["has_attn"], do_attn, (x, cache), static)
+            x = x + mamba_block(cfg, p["ssm"], rms_norm(x, p["norm"], cfg.norm_eps))
+        elif cfg.family == "ssm":
+            x = x + time_mix(cfg, p["tm"], rms_norm(x, p["ln1"], cfg.norm_eps))
+            x = x + channel_mix(cfg, p["tm"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        else:
+            a, k, v = full_attention(cfg, p["attn"],
+                                     rms_norm(x, p["ln1"], cfg.norm_eps),
+                                     positions, f["sliding"])
+            if cfg.post_norm:
+                a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+            x = x + a
+            if fill:
+                cache = write_cache_prefill(cfg, cache, f["idx"], k, v)
+            if cfg.cross_attn_period:
+                cr = extras["cross"]
+
+                def do_cross(x):
+                    cp = _tree_at(cr, f["cross_idx"])
+                    c = cross_attention(cfg, cp["attn"],
+                                        rms_norm(x, cp["ln"], cfg.norm_eps),
+                                        memory=memory)
+                    return x + c
+
+                x = _maybe(f["has_cross"], do_cross, x, static)
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                ff, a_loss = moe_ffn(cfg, p["ffn"], h)
+                aux = aux + a_loss
+            else:
+                ff = mlp(cfg, p["ffn"], h)
+            if cfg.post_norm:
+                ff = rms_norm(ff, p["ln2_post"], cfg.norm_eps)
+            x = x + ff
+        x = shard_acts(x, "batch", "seq", None)
+        return (x, aux, cache)
+
+    cache_in = cache if fill else {}
+    carry = (x, aux0, cache_in)
+
+    if cfg.scan_unroll:  # cost-probe mode: python loop, static structure
+        for i in range(cfg.n_layers):
+            p = _tree_at(layers, i)
+            f = {k: v[i] for k, v in flags.items()}
+            fn = functools.partial(one_layer, p=p, f=f, static=True)
+            if cfg.remat:
+                fn = jax.checkpoint(fn, prevent_cse=False)
+            carry = fn(carry)
+    else:
+        def body(carry, xs):
+            return one_layer(carry, xs["p"], xs["f"], False), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        xs = {"p": layers, "f": {k: jnp.asarray(v) for k, v in flags.items()}}
+        carry, _ = jax.lax.scan(body, carry, xs)
+
+    x, aux, cache_out = carry
+    return x, aux, (cache_out if fill else None)
+
+
+# ------------------------------------------------------------------- decode
+
+def stack_decode(cfg: ModelConfig, layers: dict, x: jnp.ndarray,
+                 pos: jnp.ndarray, *, extras: Optional[dict] = None,
+                 cache: Optional[dict] = None, state: Optional[dict] = None):
+    """One-token step through the stack. x (B,1,D), pos (B,) int32.
+
+    Returns (x, cache, state) with caches/states updated at ``pos``."""
+    extras = extras or {}
+    flags = layer_flags(cfg)
+    cache = cache if cache is not None else {}
+    state = state if state is not None else {}
+
+    def one_layer(carry, p, f, static):
+        x, cache, state = carry
+
+        if cfg.family == "hybrid":
+            if cfg.shared_attn_period:
+                sh = extras["shared_attn"]
+
+                def do_attn(op):
+                    x, cache = op
+                    a, cache = decode_attention(
+                        cfg, sh["attn"], rms_norm(x, sh["ln"], cfg.norm_eps),
+                        cache, f["attn_idx"], pos)
+                    return (x + a, cache)
+
+                x, cache = _maybe(f["has_attn"], do_attn, (x, cache), static)
+            h, state = mamba_decode(cfg, p["ssm"],
+                                    rms_norm(x, p["norm"], cfg.norm_eps),
+                                    state, f["idx"])
+            x = x + h
+        elif cfg.family == "ssm":
+            h, state = rwkv_decode(cfg, p["tm"],
+                                   rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   state, f["idx"])
+            x = x + h
+            h, state = rwkv_channel_decode(cfg, p["tm"],
+                                           rms_norm(x, p["ln2"], cfg.norm_eps),
+                                           state, f["idx"])
+            x = x + h
+        else:
+            a, cache = decode_attention(cfg, p["attn"],
+                                        rms_norm(x, p["ln1"], cfg.norm_eps),
+                                        cache, f["idx"], pos, f["sliding"])
+            if cfg.post_norm:
+                a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+            x = x + a
+            if cfg.cross_attn_period:
+                cr = extras["cross"]
+
+                def do_cross(x):
+                    cp = _tree_at(cr, f["cross_idx"])
+                    kv = (cache["xk"][f["cross_idx"]], cache["xv"][f["cross_idx"]])
+                    c = cross_attention(cfg, cp["attn"],
+                                        rms_norm(x, cp["ln"], cfg.norm_eps),
+                                        kv=kv)
+                    return x + c
+
+                x = _maybe(f["has_cross"], do_cross, x, static)
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                ff, _ = moe_ffn(cfg, p["ffn"], h)
+            else:
+                ff = mlp(cfg, p["ffn"], h)
+            if cfg.post_norm:
+                ff = rms_norm(ff, p["ln2_post"], cfg.norm_eps)
+            x = x + ff
+        return (x, cache, state)
+
+    carry = (x, cache, state)
+    if cfg.scan_unroll:
+        for i in range(cfg.n_layers):
+            p = _tree_at(layers, i)
+            f = {k: v[i] for k, v in flags.items()}
+            carry = one_layer(carry, p, f, True)
+    else:
+        def body(carry, xs):
+            return one_layer(carry, xs["p"], xs["f"], False), None
+
+        xs = {"p": layers, "f": {k: jnp.asarray(v) for k, v in flags.items()}}
+        carry, _ = jax.lax.scan(body, carry, xs)
+
+    return carry

@@ -1,0 +1,140 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes to
+mesh axes, resolved per-tensor with divisibility and no-reuse checks.
+
+Two rule tables:
+
+* ``PARAM_RULES`` — weights & optimizer state.  The 'model' axis carries TP
+  (heads / d_ff / vocab / experts); the 'data' axis additionally shards the
+  weight's other large dim (ZeRO-3/FSDP-style fully-sharded parameters: GSPMD
+  inserts the per-layer all-gather and the gradient reduce-scatter).
+* ``ACT_RULES`` — activations.  'batch' spans ('pod','data') (DP); 'seq' maps
+  to 'model' (sequence parallelism for the residual stream between blocks —
+  the TP all-gather/reduce-scatter pair replaces a full activation replica);
+  'kv_seq' also maps to 'model' so decode over a long cache becomes
+  flash-decoding (sharded-softmax) under GSPMD.
+
+Model code never mentions mesh axes — it annotates logical axes via
+``shard_acts(x, 'batch', 'seq', None)``, a no-op unless a ShardingContext is
+installed (CPU unit tests run without one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisSpec = Union[str, tuple, None]
+
+# logical axis -> mesh axis (or tuple of mesh axes). Order = priority.
+PARAM_RULES: dict[str, AxisSpec] = {
+    "embed": "data",        # ZeRO-3: shard the non-TP weight dim over DP
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "ssm_heads": "model",
+    "layers": None,
+    "conv": None,
+    "state": None,
+}
+
+ACT_RULES: dict[str, AxisSpec] = {
+    "batch": ("pod", "data"),
+    "moe_group": ("pod", "data", "model"),  # fully chip-local MoE dispatch
+    "seq": "model",          # sequence parallelism on the residual stream
+    "kv_seq": "model",       # flash-decoding: shard long KV caches on seq
+    "kv_batch": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "ssm_heads": "model",
+    "embed": None,
+    "layers": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Mesh
+    param_rules: dict[str, AxisSpec] = dataclasses.field(
+        default_factory=lambda: dict(PARAM_RULES))
+    act_rules: dict[str, AxisSpec] = dataclasses.field(
+        default_factory=lambda: dict(ACT_RULES))
+
+
+_TLS = threading.local()
+
+
+def set_context(ctx: Optional[ShardingContext]) -> None:
+    _TLS.ctx = ctx
+
+
+def get_context() -> Optional[ShardingContext]:
+    return getattr(_TLS, "ctx", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = get_context()
+    return ctx.mesh if ctx is not None else None
+
+
+def _usable(axis: AxisSpec, mesh: Mesh, dim: int, used: set) -> Optional[tuple]:
+    """Resolve one rule entry to a tuple of unused mesh axes dividing ``dim``."""
+    if axis is None:
+        return None
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    names = tuple(n for n in names if n in mesh.axis_names and n not in used)
+    if not names:
+        return None
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    # greedy prefix: drop trailing axes until the product divides the dim
+    while names and dim % size != 0:
+        size //= mesh.shape[names[-1]]
+        names = names[:-1]
+    return names if names and dim % size == 0 and size > 1 else None
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Mesh, rules: dict[str, AxisSpec]) -> PartitionSpec:
+    """Resolve logical ``axes`` of a tensor with ``shape`` to a PartitionSpec.
+
+    Skips rules whose mesh axes are already used by an earlier dim (GSPMD
+    forbids reuse) or do not divide the dim (keeps every cell well-formed
+    across the 10 heterogeneous architectures)."""
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        rule = rules.get(ax) if ax is not None else None
+        resolved = _usable(rule, mesh, int(dim), used)
+        if resolved:
+            used.update(resolved)
+            parts.append(resolved if len(resolved) > 1 else resolved[0])
+        else:
+            parts.append(None)
+    return PartitionSpec(*parts)
+
+
+def named_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
+                   mesh: Mesh, *, params: bool = True,
+                   rules: Optional[dict] = None) -> NamedSharding:
+    if rules is None:
+        rules = PARAM_RULES if params else ACT_RULES
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def shard_acts(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a context)."""
+    ctx = get_context()
+    if ctx is None:
+        return x
+    spec = spec_for(x.shape, axes, ctx.mesh, ctx.act_rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

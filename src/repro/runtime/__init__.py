@@ -1,0 +1,7 @@
+"""Distributed runtime: fault tolerance, straggler mitigation, elastic
+re-meshing, and the checkpoint/restart training driver (CPU-simulated)."""
+from .ft import ElasticPlan, SimCluster, StragglerDetector, plan_elastic_remesh
+from .driver import TrainDriver, TrainRunConfig
+
+__all__ = ["SimCluster", "StragglerDetector", "ElasticPlan",
+           "plan_elastic_remesh", "TrainDriver", "TrainRunConfig"]

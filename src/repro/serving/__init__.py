@@ -1,0 +1,5 @@
+"""Serving substrate: learned paged-KV cache + continuous batching engine."""
+from .kv_cache import LearnedPageTable, PagePool
+from .engine import ServeEngine, Request
+
+__all__ = ["LearnedPageTable", "PagePool", "ServeEngine", "Request"]

@@ -1,0 +1,122 @@
+"""Continuous-batching serve engine over the learned paged-KV cache.
+
+Requests are admitted into a fixed number of decode slots; a sequence that
+finishes frees its pages (AULID deletes) and its slot is immediately refilled
+from the queue — the page pool stays dense under churn, which is exactly the
+sparse logical-key workload the learned page table is built for.
+
+Prompt processing here is incremental decode (prefill == decode steps at the
+reduced serving scale); the multi-chip prefill path is exercised by the
+dry-run cells instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .kv_cache import LearnedPageTable, PagePool
+from .paged_model import init_page_pool, paged_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 8
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 page_size: int = 16, n_pages: int = 256,
+                 max_pages_per_seq: int = 32, interpret: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_pages = max_pages_per_seq
+        self.pool_pages = PagePool(n_pages)
+        self.table = LearnedPageTable(self.pool_pages)
+        self.kv = init_page_pool(cfg, n_pages, page_size)
+        self.slots: list[Optional[Request]] = [None] * slots
+        self.slot_seq = np.zeros(slots, np.int64)      # seq id per slot
+        self.slot_pos = np.zeros(slots, np.int64) - 1  # last written position
+        self.queue: list[Request] = []
+        self.next_seq = 1                               # seq ids start at 1
+        self.interpret = interpret
+        self.steps = 0
+        self.completed: list[Request] = []
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s, cur in enumerate(self.slots):
+            if cur is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[s] = req
+                self.slot_seq[s] = self.next_seq
+                self.next_seq += 1
+                self.slot_pos[s] = -1
+
+    # -- one engine step -----------------------------------------------------
+    def _ensure_pages(self) -> None:
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pos = int(self.slot_pos[s]) + 1
+            lp = pos // self.page_size
+            if self.table.translate(int(self.slot_seq[s]), lp) is None:
+                self.table.alloc_page(int(self.slot_seq[s]), lp)
+
+    def _tables(self) -> np.ndarray:
+        B = len(self.slots)
+        seqs = np.repeat(self.slot_seq, self.max_pages)
+        lps = np.tile(np.arange(self.max_pages), B)
+        phys = self.table.translate_batch(seqs, lps).reshape(B, self.max_pages)
+        return np.maximum(phys, 0).astype(np.int32)
+
+    def step(self) -> None:
+        """Admit, allocate, translate, decode one token for every slot."""
+        self._admit()
+        if all(r is None for r in self.slots):
+            return
+        self._ensure_pages()
+        B = len(self.slots)
+        tokens = np.zeros((B, 1), np.int32)
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(self.slot_pos[s]) + 1
+            if t < len(req.prompt):
+                tokens[s, 0] = req.prompt[t]
+            else:
+                tokens[s, 0] = req.out[-1] if req.out else 0
+        pos = np.maximum(self.slot_pos + 1, 0)
+        tables = self._tables()
+        logits, nxt = paged_decode_step(
+            self.cfg, self.params, tokens, pos.astype(np.int64),
+            self.kv, tables, self.page_size, interpret=self.interpret)
+        self.slot_pos = pos
+        self.steps += 1
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(pos[s])
+            if t >= len(req.prompt) - 1:
+                req.out.append(int(nxt[s]))
+            if len(req.out) >= req.max_new or t + 1 >= self.max_pages * self.page_size:
+                req.done = True
+                self.completed.append(req)
+                self.table.free_seq(int(self.slot_seq[s]))
+                self.slots[s] = None
+
+    def run(self, max_steps: int = 200) -> list[Request]:
+        while (self.queue or any(r is not None for r in self.slots)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.completed

@@ -1,0 +1,77 @@
+"""Paged decode step: the dense-family decode path with the KV cache in a
+global page pool addressed through the learned page table.
+
+Numerically identical to ``models.model.decode_step`` with a contiguous
+cache (asserted in tests) — the difference is WHERE k/v live: a shared
+(L, P, page, Hkv, Dh) pool, with per-sequence page tables produced by
+batched AULID lookups and consumed by the flash-decoding Pallas kernel
+(``kernels.paged_attention``) as scalar-prefetch block ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..kernels.paged_attention.ops import paged_attention
+from ..models.attention import _project_qkv
+from ..models.common import apply_rope, rms_norm, softcap
+from ..models.mlp import mlp
+from ..models.model import _head
+from ..models.transformer import _tree_at
+
+
+def init_page_pool(cfg: ModelConfig, n_pages: int, page_size: int):
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    shape = (cfg.n_layers, n_pages, page_size, hk, dh)
+    return {"k": np.zeros(shape, np.float32), "v": np.zeros(shape, np.float32)}
+
+
+def paged_decode_step(cfg: ModelConfig, params: dict, tokens: np.ndarray,
+                      pos: np.ndarray, pool: dict, tables: np.ndarray,
+                      page_size: int, *, interpret: bool = True):
+    """One decode step for a dense-family reduced config (host-driven loop;
+    serving runs on one replica — the multi-chip path is `launch.dryrun`).
+
+    tokens (B,1) i32; pos (B,) i32; tables (B, NP) i32 physical page per
+    logical page (from LearnedPageTable.translate_batch). Mutates ``pool``.
+    Returns (logits (B,V), next_token (B,))."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], jnp.asarray(tokens), axis=0)
+    x = x.astype(jnp.float32)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    pos_j = jnp.asarray(pos)
+    lengths = jnp.asarray(pos) + 1
+    bidx = np.arange(B)
+    phys = tables[bidx, pos // page_size]          # page holding this token
+    slot = pos % page_size
+
+    for layer in range(cfg.n_layers):
+        p = _tree_at(params["layers"], layer)
+        h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, p["attn"], h_in)
+        q = apply_rope(q, pos_j[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos_j[:, None], cfg.rope_theta)
+        # write the new token's k/v into its learned-index-addressed page
+        pool["k"][layer, phys, slot] = np.asarray(k[:, 0], np.float32)
+        pool["v"][layer, phys, slot] = np.asarray(v[:, 0], np.float32)
+        att = paged_attention(tables, lengths, q[:, 0],
+                              jnp.asarray(pool["k"][layer]),
+                              jnp.asarray(pool["v"][layer]),
+                              interpret=interpret)
+        a = att.reshape(B, 1, -1) @ p["attn"]["wo"].astype(x.dtype)
+        if cfg.post_norm:
+            a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+        x = x + a
+        hh = rms_norm(x, p["ln2"], cfg.norm_eps)
+        ff = mlp(cfg, p["ffn"], hh)
+        if cfg.post_norm:
+            ff = rms_norm(ff, p["ln2_post"], cfg.norm_eps)
+        x = x + ff
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head(cfg, params, x)[:, 0]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return np.asarray(logits), np.asarray(nxt)

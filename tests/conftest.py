@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+host's real (single) device; only launch/dryrun.py forces 512 devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def datasets():
+    from repro.core.workloads import make_dataset
+    return {name: make_dataset(name, 20_000, seed=1)
+            for name in ("covid", "planet", "genome", "osm")}

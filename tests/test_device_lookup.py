@@ -1,0 +1,69 @@
+"""Device mirror (flat pools + batched JAX lookup) == host AULID."""
+import numpy as np
+import pytest
+
+from repro.core import Aulid
+from repro.core.device_index import build_device_index
+from repro.core.lookup import device_arrays, lookup_batch, scan_batch
+from repro.core.workloads import payloads_for
+
+import jax.numpy as jnp
+
+
+def _mirror(idx):
+    di = build_device_index(idx)
+    return di, device_arrays(di)
+
+
+@pytest.mark.parametrize("name", ["covid", "planet", "genome", "osm"])
+def test_lookup_batch_matches_host(name, datasets):
+    keys = datasets[name]
+    idx = Aulid()
+    idx.bulkload(keys, payloads_for(keys))
+    di, arrs = _mirror(idx)
+    rng = np.random.default_rng(0)
+    hits = rng.choice(keys, 512)
+    misses = rng.integers(0, 2**62, 256).astype(np.uint64)
+    q = np.concatenate([hits, misses])
+    pay, found, _ = lookup_batch(arrs, jnp.asarray(q),
+                                 height=max(di.max_inner_height, 3))
+    pay, found = np.asarray(pay), np.asarray(found)
+    for k, p, f in zip(q, pay, found):
+        exp = idx.lookup(int(k))
+        assert (exp is None) == (not f)
+        if exp is not None:
+            assert int(p) == exp
+
+
+def test_lookup_batch_after_inserts(datasets):
+    keys = datasets["osm"][:10_000]
+    idx = Aulid()
+    idx.bulkload(keys, payloads_for(keys))
+    rng = np.random.default_rng(1)
+    new = rng.integers(0, 2**50, 4_000)
+    for k in new:
+        idx.insert(int(k), int(k) + 3)
+    di, arrs = _mirror(idx)
+    q = np.unique(new)[:512]
+    pay, found, _ = lookup_batch(arrs, jnp.asarray(q),
+                                 height=max(di.max_inner_height, 3))
+    assert bool(np.asarray(found).all())
+    assert (np.asarray(pay) == q + 3).all()
+
+
+def test_scan_batch(datasets):
+    keys = datasets["planet"]
+    idx = Aulid()
+    idx.bulkload(keys, payloads_for(keys))
+    di, arrs = _mirror(idx)
+    starts = np.array([keys[10], keys[5_000], keys[len(keys) - 120]],
+                      dtype=np.uint64)
+    ks, ps, valid = scan_batch(arrs, jnp.asarray(starts), count=100,
+                               height=max(di.max_inner_height, 3))
+    ks, ps, valid = map(np.asarray, (ks, ps, valid))
+    for i, s in enumerate(starts):
+        exp = idx.scan(int(s), 100)
+        n = int(valid[i].sum())
+        assert n == len(exp)
+        assert ks[i][: len(exp)].tolist() == [e[0] for e in exp]
+        assert ps[i][: len(exp)].tolist() == [e[1] for e in exp]

@@ -1,0 +1,110 @@
+"""Dry-run machinery on recorded artifacts + HLO analysis unit tests.
+
+The full 512-device matrix runs via ``python -m repro.launch.dryrun --all``
+(results under experiments/dryrun/); here we validate the analysis layer and
+— in a subprocess so the device-count flag cannot leak — one real forced-512
+cell end to end.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = REPO / "experiments" / "dryrun"
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ar = f32[256,1024]{1,0} all-reduce(f32[256,1024]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[64,4096]{1,0} all-gather(bf16[8,4096]{1,0} %y), dimensions={0}
+  %rs = (f32[128]{0}, f32[128]{0}) reduce-scatter(f32[1024]{0} %z, f32[1024]{0} %w)
+  %done = f32[8]{0} all-reduce-done(f32[8]{0} %h)
+  %cp = u8[512]{0} collective-permute(u8[512]{0} %q)
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_bytes_and_ring_factor(self):
+        out = H.collective_bytes(HLO_SAMPLE)
+        assert out["counts"]["all-reduce"] == 1       # -done not re-counted
+        assert out["bytes"]["all-reduce"] == 256 * 1024 * 4 * 2  # ring x2
+        assert out["bytes"]["all-gather"] == 64 * 4096 * 2
+        assert out["bytes"]["reduce-scatter"] == 2 * 128 * 4
+        assert out["bytes"]["collective-permute"] == 512
+
+    def test_roofline_terms(self):
+        r = H.Roofline(compute_s=1.0, memory_s=2.0, collective_s=0.5,
+                       flops=1, hbm_bytes=1, coll_bytes=1)
+        assert r.dominant == "memory"
+        assert r.bound_s == 2.0
+
+
+class TestModelFlops:
+    def test_dense_6nd(self):
+        from repro.configs import get_config
+        from repro.configs.base import SHAPES
+        cfg = get_config("qwen3-8b")
+        mf = H.model_flops(cfg, SHAPES["train_4k"])
+        # ~8.2B params x 6 x ~1.05M tokens ~ 5.2e16 (within 2x for embeddings)
+        assert 2e16 < mf < 1e17
+
+    def test_moe_active_discount(self):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.configs.base import SHAPES
+        cfg = get_config("qwen2-moe-a2.7b")
+        mf = H.model_flops(cfg, SHAPES["train_4k"])
+        all_active = H.model_flops(
+            dataclasses.replace(cfg, top_k=cfg.n_experts),
+            SHAPES["train_4k"])
+        assert mf < all_active  # top-4 of 60 < all 60 active
+
+
+@pytest.mark.skipif(not DRYRUN.exists() or not list(DRYRUN.glob("*.json")),
+                    reason="dry-run matrix not recorded yet")
+class TestRecordedMatrix:
+    def test_all_cells_ok(self):
+        recs = [json.loads(p.read_text()) for p in DRYRUN.glob("*.json")]
+        assert recs
+        bad = [(r["arch"], r["shape"], r["mesh"]) for r in recs
+               if r["status"] != "ok"]
+        assert not bad, f"failed dry-run cells: {bad}"
+
+    def test_single_pod_cells_have_roofline(self):
+        for p in DRYRUN.glob("*__16x16.json"):
+            r = json.loads(p.read_text())
+            assert "roofline" in r, p.name
+            rf = r["roofline"]
+            assert rf["compute_s"] > 0
+            assert rf["dominant"] in ("compute", "memory", "collective")
+
+    def test_multi_pod_pairs_exist(self):
+        singles = {p.name.replace("__16x16.json", "")
+                   for p in DRYRUN.glob("*__16x16.json")}
+        multis = {p.name.replace("__2x16x16.json", "")
+                  for p in DRYRUN.glob("*__2x16x16.json")}
+        assert singles == multis, singles ^ multis
+
+
+FORCED_512 = textwrap.dedent("""
+    import sys
+    from repro.launch.dryrun import run_cell
+    rec = run_cell("granite-moe-1b-a400m", "decode_32k", multi_pod=True)
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["chips"] == 512
+    print("FORCED512_OK")
+""")
+
+
+def test_forced_512_cell_subprocess():
+    """One real 512-device lower+compile, isolated in a subprocess."""
+    r = subprocess.run([sys.executable, "-c", FORCED_512],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "FORCED512_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]

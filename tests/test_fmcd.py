@@ -1,0 +1,53 @@
+"""FMCD model fitting: properties the paper's inner nodes rely on."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fmcd import LinearModel, conflict_degree, fmcd, min_window_gap
+
+
+sorted_keys = st.lists(st.integers(0, 2**62), min_size=2, max_size=300,
+                       unique=True).map(lambda xs: np.array(sorted(xs),
+                                                            dtype=np.uint64))
+
+
+@given(sorted_keys, st.integers(2, 4096))
+@settings(max_examples=200, deadline=None)
+def test_fmcd_conflict_bound(keys, fanout):
+    """The achieved conflict degree never exceeds the bound FMCD reports."""
+    model, d = fmcd(keys, fanout)
+    assert model.slope > 0, "FMCD model must be monotonic (P: NULL fwd scan)"
+    actual = conflict_degree(keys, model, fanout)
+    assert actual <= max(d, 1) + 1  # +1: clipping at the boundary slot
+
+
+@given(sorted_keys)
+@settings(max_examples=100, deadline=None)
+def test_fmcd_monotone_predictions(keys):
+    model, _ = fmcd(keys, 1024)
+    slots = model.predict_clipped(keys, 1024)
+    assert np.all(np.diff(slots.astype(np.int64)) >= 0)
+
+
+def test_min_window_gap():
+    keys = np.array([0, 10, 20, 100], dtype=np.float64)
+    assert min_window_gap(keys, 1) == 10
+    assert min_window_gap(keys, 2) == 20
+    assert min_window_gap(keys, 3) == 100
+    assert min_window_gap(keys, 10) == 100
+
+
+def test_fmcd_uniform_is_conflict_free():
+    keys = np.arange(0, 1000, 10, dtype=np.uint64)
+    model, d = fmcd(keys, 2 * len(keys))
+    assert d == 1
+    assert conflict_degree(keys, model, 2 * len(keys)) == 1
+
+
+def test_dataset_hardness_ordering(datasets):
+    """Paper Table 1: covid/planet easy << genome << osm."""
+    from repro.core.fmcd import dataset_conflict_degree
+    cd = {n: dataset_conflict_degree(k) for n, k in datasets.items()}
+    assert max(cd["covid"], cd["planet"]) <= 8
+    assert cd["genome"] > 2 * max(cd["covid"], cd["planet"])
+    assert cd["osm"] > cd["genome"]

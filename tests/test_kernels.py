@@ -1,0 +1,154 @@
+"""Pallas kernels vs their pure-jnp/numpy oracles (interpret mode on CPU),
+sweeping shapes and dtypes per the deliverable-(c) requirement."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Aulid, AulidConfig, BlockDevice
+from repro.core.device_index import build_device_index
+from repro.core.workloads import make_dataset, payloads_for
+from repro.kernels.leaf_search.ops import leaf_search
+from repro.kernels.inner_probe.ops import ProbeIndex, inner_probe_lookup
+from repro.kernels.inner_probe.inner_probe import probe_level
+from repro.kernels.inner_probe.ref import probe_level_ref
+from repro.kernels.leaf_search.ops import split_u64
+from repro.kernels.paged_attention.ops import paged_attention
+
+
+class TestLeafSearch:
+    @pytest.mark.parametrize("C", [128, 256, 512])
+    @pytest.mark.parametrize("Q", [1, 64, 257])
+    def test_vs_ref_shapes(self, C, Q):
+        rng = np.random.default_rng(C * 1000 + Q)
+        L = 16
+        keys = np.sort(rng.integers(0, 2**63, (L, C)).astype(np.uint64), axis=1)
+        pay = keys ^ np.uint64(0xDEADBEEF)
+        rows = rng.integers(0, L, Q).astype(np.int32)
+        q = np.where(np.arange(Q) % 2 == 0,
+                     keys[rows, rng.integers(0, C, Q)],
+                     rng.integers(0, 2**63, Q).astype(np.uint64))
+        pk, fk = leaf_search(keys, pay, rows, q, interpret=True)
+        pr, fr = leaf_search(keys, pay, rows, q, use_ref=True)
+        fr = np.asarray(fr)
+        assert (fk == fr).all()
+        assert (pk[fk] == np.asarray(pr)[fr]).all()
+        assert fk[::2].all()
+
+    def test_u64_extremes(self):
+        """Plane-split compares must be exact at the u64 extremes."""
+        keys = np.array([[0, 1, 2**32 - 1, 2**32, 2**63, 2**64 - 2,
+                          2**64 - 1, 2**64 - 1]], dtype=np.uint64)
+        pay = keys + np.uint64(1)
+        q = np.array([0, 2**32 - 1, 2**32, 2**63, 2**64 - 2], dtype=np.uint64)
+        rows = np.zeros(len(q), np.int32)
+        pk, fk = leaf_search(keys, pay, rows, q, interpret=True)
+        assert fk.all()
+        assert (pk == q + 1).all()
+
+
+class TestInnerProbe:
+    def test_probe_level_vs_ref(self, datasets):
+        keys = datasets["genome"]
+        idx = Aulid()
+        idx.bulkload(keys, payloads_for(keys))
+        pi = ProbeIndex(build_device_index(idx))
+        rng = np.random.default_rng(0)
+        q = rng.choice(keys, 128).astype(np.uint64)
+        qh, ql = split_u64(q)
+        slots = pi.predict(np.zeros(len(q), np.int64), q)
+        kk, vk = probe_level(slots, qh, ql, pi.tag_b, pi.kh_b, pi.kl_b,
+                             pi.ptr_b, pi.succ_b, pi.nocc_b, interpret=True)
+        kr, vr = probe_level_ref(slots, qh, ql, pi.tag_b, pi.kh_b, pi.kl_b,
+                                 pi.ptr_b, pi.succ_b, pi.nocc_b)
+        assert (np.asarray(kk) == kr).all()
+        assert (np.asarray(vk) == vr).all()
+
+    @pytest.mark.parametrize("name", ["covid", "osm"])
+    def test_full_lookup_vs_host(self, name, datasets):
+        keys = datasets[name]
+        idx = Aulid()
+        idx.bulkload(keys, payloads_for(keys))
+        pi = ProbeIndex(build_device_index(idx))
+        rng = np.random.default_rng(1)
+        q = np.concatenate([rng.choice(keys, 200),
+                            rng.integers(0, 2**62, 56).astype(np.uint64)])
+        pay, found = inner_probe_lookup(pi, q, interpret=True)
+        for k, p, f in zip(q, pay, found):
+            exp = idx.lookup(int(k))
+            assert (exp is None) == (not f)
+            if exp is not None:
+                assert int(p) == exp
+
+    def test_after_inserts_deep_index(self):
+        """Probe the small-geometry index where mixed depth > 1."""
+        rng = np.random.default_rng(2)
+        keys = np.unique(rng.integers(0, 2**60, 20_000).astype(np.uint64))
+        idx = Aulid(BlockDevice(), cfg=AulidConfig(
+            leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15))
+        idx.bulkload(keys, keys + np.uint64(1))
+        hot = np.unique(rng.integers(10**9, 10**9 + 10**6, 4_000)
+                        ).astype(np.uint64)
+        for k in hot:
+            idx.insert(int(k), int(k) + 1)
+        pi = ProbeIndex(build_device_index(idx))
+        q = np.concatenate([hot[:200], keys[:200]])
+        pay, found = inner_probe_lookup(pi, q, interpret=True)
+        assert found.all()
+        assert (pay == q + 1).all()
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("geom", [
+        (4, 8, 2, 64, 16, 64, 8),     # GQA g=4
+        (2, 16, 16, 128, 64, 32, 4),  # MHA
+        (1, 4, 1, 32, 8, 16, 3),      # MQA, tiny pages
+    ])
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    def test_vs_ref(self, geom, dtype):
+        B, H, hk, dh, page, P, NP = geom
+        rng = np.random.default_rng(B * H)
+        qa = jnp.asarray(rng.normal(size=(B, H, dh)), dtype)
+        kp = jnp.asarray(rng.normal(size=(P, page, hk, dh)), dtype)
+        vp = jnp.asarray(rng.normal(size=(P, page, hk, dh)), dtype)
+        table = rng.integers(0, P, (B, NP)).astype(np.int32)
+        lens = rng.integers(1, NP * page, B).astype(np.int32)
+        ok = paged_attention(table, lens, qa, kp, vp, interpret=True)
+        orf = paged_attention(table, lens, qa, kp, vp, use_ref=True)
+        tol = 1e-5 if dtype == np.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(ok, np.float32),
+                                   np.asarray(orf, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_matches_dense_attention(self):
+        """Paged (table-indirected) == dense contiguous attention."""
+        rng = np.random.default_rng(9)
+        B, H, hk, dh, page, NP = 2, 4, 2, 32, 8, 4
+        S = NP * page
+        kd = rng.normal(size=(B, S, hk, dh)).astype(np.float32)
+        vd = rng.normal(size=(B, S, hk, dh)).astype(np.float32)
+        qa = rng.normal(size=(B, H, dh)).astype(np.float32)
+        lens = np.array([S, S // 2 + 3], np.int32)
+        # scatter into a shuffled page pool
+        P = B * NP
+        perm = rng.permutation(P)
+        kp = np.zeros((P, page, hk, dh), np.float32)
+        vp = np.zeros((P, page, hk, dh), np.float32)
+        table = np.zeros((B, NP), np.int32)
+        for b in range(B):
+            for p in range(NP):
+                phys = perm[b * NP + p]
+                table[b, p] = phys
+                kp[phys] = kd[b, p * page:(p + 1) * page]
+                vp[phys] = vd[b, p * page:(p + 1) * page]
+        out = paged_attention(table, lens, qa, kp, vp, interpret=True)
+        # dense oracle
+        g = H // hk
+        qf = qa.reshape(B, hk, g, dh)
+        logits = np.einsum("bkgd,bskd->bkgs", qf, kd) / np.sqrt(dh)
+        mask = np.arange(S)[None, :] < lens[:, None]
+        logits = np.where(mask[:, None, None, :], logits, -1e30)
+        w = np.exp(logits - logits.max(-1, keepdims=True))
+        w /= w.sum(-1, keepdims=True)
+        exp = np.einsum("bkgs,bskd->bkgd", w, vd).reshape(B, H, dh)
+        np.testing.assert_allclose(np.asarray(out), exp, atol=1e-4)

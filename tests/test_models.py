@@ -1,0 +1,147 @@
+"""Per-arch smoke tests (reduced configs, 1 CPU device) + consistency:
+prefill+decode == full forward, chunked attention == naive, training learns."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, shapes_for
+from repro.models import model as M
+
+
+def _batch(cfg, B, S, key):
+    batch = {}
+    if cfg.frontend_stub and cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model)
+                                            ).astype(jnp.bfloat16) * 0.1
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size
+                                             ).astype(jnp.int32)
+    batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size
+                                         ).astype(jnp.int32)
+    if cfg.cross_attn_period:
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model)).astype(jnp.bfloat16) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_train_forward(self, arch):
+        cfg = get_config(arch).reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch(cfg, 2, 256, jax.random.PRNGKey(1))
+        loss, metrics = M.loss_fn(cfg, params, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    def test_prefill_decode_consistency(self, arch):
+        """Greedy decode at position t from a prefilled cache must match the
+        full-sequence forward's logits at position t.
+
+        MoE archs run dropless (capacity_factor = n_experts) here: capacity
+        *dropping* legitimately differs between whole-batch prefill routing
+        and single-token decode routing — the standard serving setting is
+        dropless, which makes the two paths exactly consistent."""
+        cfg = dataclasses.replace(get_config(arch).reduced(), remat=False)
+        if cfg.family == "moe":
+            cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        # recurrent archs compound bf16 drift per decoded step: shorter probe
+        B, S = 2, (32 if cfg.family in ("ssm", "hybrid") else 64)
+        batch = _batch(cfg, B, S, jax.random.PRNGKey(2))
+        # full forward logits at the last position
+        x, _, _ = M.forward(cfg, params, batch)
+        full_logits = M._head(cfg, params, x[:, -1:])[:, 0]
+        # prefill on S-1 tokens, then decode token S-1
+        cache = M.init_zeros(M.cache_specs(cfg, B, S))
+        state = M.init_zeros(M.state_specs(cfg, B))
+        if cfg.family in ("ssm", "hybrid"):
+            # recurrent archs: prefill cannot seed the SSM state, so decode
+            # every position and compare at the end
+            logits = None
+            for t in range(S):
+                tok = (batch["tokens"][:, t: t + 1]
+                       if "tokens" in batch else None)
+                if tok is None:  # audio stub: embed frames not supported here
+                    pytest.skip("frame-input decode covered in train smoke")
+                pos = jnp.full((B,), t, jnp.int32)
+                logits, _, cache, state = M.decode_step(
+                    cfg, params, tok, pos, cache if cache else None, state)
+            dec_logits = logits
+        else:
+            if "tokens" not in batch:
+                pytest.skip("audio stub prefill uses frames; decode is "
+                            "token-driven (covered by serve tests)")
+            pre = dict(batch)
+            pre["tokens"] = batch["tokens"][:, : S - 1]
+            if "patches" in batch:
+                pre["patches"] = batch["patches"]
+            _, cache = M.prefill(cfg, params, pre, cache)
+            pos = jnp.full((B,), S - 1, jnp.int32)
+            dec_logits, _, _, state = M.decode_step(
+                cfg, params, batch["tokens"][:, S - 1: S], pos,
+                cache if cache else None, state if state else None)
+        a = np.asarray(dec_logits, np.float32)
+        b = np.asarray(full_logits, np.float32)
+        np.testing.assert_allclose(a, b, atol=1.0, rtol=0.25)
+        # per-row cosine similarity: robust to bf16 recurrent drift (argmax
+        # on near-uniform random-init logits is coin-flip fragile)
+        cos = np.sum(a * b, -1) / (np.linalg.norm(a, axis=-1)
+                                   * np.linalg.norm(b, axis=-1) + 1e-9)
+        assert cos.min() > 0.95, f"{arch}: prefill/decode diverged ({cos})"
+
+    def test_input_specs_complete(self, arch):
+        cfg = get_config(arch)
+        for shape_name in shapes_for(cfg):
+            specs = M.input_specs(cfg, shape_name)
+            assert specs, (arch, shape_name)
+            flat = jax.tree.leaves(specs,
+                                   is_leaf=lambda x: isinstance(x, M.Spec))
+            for s in flat:
+                assert all(d > 0 for d in s.shape)
+
+
+def test_chunked_attention_exact():
+    cfg = get_config("gemma2-9b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, 2, 256, jax.random.PRNGKey(3))
+    l0, _ = M.loss_fn(cfg, params, batch)
+    l1, _ = M.loss_fn(dataclasses.replace(cfg, attn_q_chunk=64), params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=2e-3)
+
+
+def test_unrolled_probe_matches_scan():
+    for arch in ("zamba2-1.2b", "llama-3.2-vision-11b", "qwen2-moe-a2.7b"):
+        cfg = dataclasses.replace(get_config(arch).reduced(), remat=False)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch(cfg, 2, 128, jax.random.PRNGKey(4))
+        l0, _ = M.loss_fn(cfg, params, batch)
+        l1, _ = M.loss_fn(dataclasses.replace(cfg, scan_unroll=True),
+                          params, batch)
+        # bf16 accumulation-order differences between scan and unroll
+        np.testing.assert_allclose(float(l0), float(l1), rtol=6e-3,
+                                   err_msg=arch)
+
+
+def test_training_learns():
+    """A few steps of the real train_step reduce the loss."""
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+    cfg = dataclasses.replace(
+        get_config("qwen3-4b").reduced(), n_layers=2, d_model=128, n_heads=2,
+        n_kv_heads=2, head_dim=64, d_ff=256, vocab_size=128, remat=False)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3, warmup_steps=2,
+                                                    total_steps=30)))
+    key = jax.random.PRNGKey(5)
+    batch = _batch(cfg, 4, 64, key)  # fixed batch: memorization test
+    losses = []
+    for _ in range(15):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses
+    assert all(np.isfinite(losses))

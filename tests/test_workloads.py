@@ -1,0 +1,34 @@
+"""Workload harness: every paper workload runs and reports sane metrics."""
+import numpy as np
+import pytest
+
+from repro.core import Aulid
+from repro.core.baselines import BPlusTree
+from repro.core.workloads import (WORKLOADS, make_dataset, payloads_for,
+                                  run_workload)
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_workload_runs(workload, datasets):
+    keys = datasets["covid"][:8_000]
+    res = run_workload(Aulid(), workload, keys, "covid", n_queries=500)
+    assert res.ops > 0
+    assert res.reads_per_op >= 0
+    assert res.storage_bytes > 0
+    assert res.throughput > 0
+
+
+def test_lookup_correct_under_workload(datasets):
+    keys = datasets["genome"][:8_000]
+    idx = Aulid()
+    run_workload(idx, "w5_balanced", keys, "genome", n_queries=2_000)
+    idx.check_invariants()
+
+
+def test_blocks_metric_comparable(datasets):
+    """AULID and B+-tree measured through identical accounting."""
+    keys = datasets["covid"][:8_000]
+    ra = run_workload(Aulid(), "w1_lookup", keys, "covid", n_queries=500)
+    rb = run_workload(BPlusTree(), "w1_lookup", keys, "covid", n_queries=500)
+    assert 1.0 <= ra.reads_per_op <= 6.0
+    assert 1.0 <= rb.reads_per_op <= 6.0
