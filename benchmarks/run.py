@@ -15,7 +15,7 @@ import traceback
 
 MODULES = ["workloads", "bulkload", "tail_latency", "scalability",
            "design_read_opts", "design_structures", "adjust_study",
-           "device_lookup", "roofline"]
+           "device_lookup", "mixed_serving", "roofline"]
 
 
 def main():

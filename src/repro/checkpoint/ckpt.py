@@ -39,7 +39,8 @@ def _fnv1a(s: str) -> np.uint64:
 
 
 def _flatten(tree) -> list[tuple[str, np.ndarray]]:
-    leaves = jax.tree.flatten_with_path(tree)[0]
+    # jax.tree.flatten_with_path needs jax>=0.4.34's alias; use tree_util
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(p), np.asarray(v)) for p, v in leaves]
 
 
@@ -112,7 +113,7 @@ def restore_checkpoint(ckpt_dir: str, tree_like, shardings=None):
             cache[s] = np.load(d / f"shard_{s}.npz")
         return cache[s][e["entry"]]
 
-    leaves, treedef = jax.tree.flatten_with_path(tree_like)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     out = []
     flat_sh = (treedef.flatten_up_to(shardings) if shardings is not None
                else [None] * len(leaves))

@@ -1,8 +1,10 @@
 """AULID core: the paper's contribution + baselines + device lookup path."""
-from .aulid import Aulid, AulidConfig
+from .aulid import Aulid, AulidConfig, JournalEntry
 from .blockdev import BlockDevice, IOStats
+from .delta_overlay import DeltaOverlay
 from .fmcd import LinearModel, fmcd, conflict_degree, dataset_conflict_degree
 from .interface import OrderedIndex
 
-__all__ = ["Aulid", "AulidConfig", "BlockDevice", "IOStats", "LinearModel",
-           "fmcd", "conflict_degree", "dataset_conflict_degree", "OrderedIndex"]
+__all__ = ["Aulid", "AulidConfig", "BlockDevice", "DeltaOverlay", "IOStats",
+           "JournalEntry", "LinearModel", "fmcd", "conflict_degree",
+           "dataset_conflict_degree", "OrderedIndex"]

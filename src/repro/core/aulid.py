@@ -44,6 +44,19 @@ TAG_BT = 3      # two-layer B+-tree
 TAG_MIXED = 4   # child mixed node
 
 
+@dataclasses.dataclass(frozen=True)
+class JournalEntry:
+    """One logical write since the last mirror snapshot (DESIGN.md §3).
+
+    ``leaf`` is the host block id whose content changed — the refresh fast
+    path (``device_index.refresh_device_index``) re-mirrors exactly those
+    rows instead of re-enumerating the whole tree."""
+    op: str          # "insert" | "delete" | "update"
+    key: int
+    payload: int
+    leaf: int
+
+
 @dataclasses.dataclass
 class AulidConfig:
     block_bytes: int = 4096
@@ -304,6 +317,24 @@ class Aulid(OrderedIndex):
         self.smo_leaf_splits = 0
         self.smo_node_creates = 0
         self.smo_adjusts = 0
+        # Change journal since bulkload (DESIGN.md §3): consumed by the
+        # incremental mirror refresh and the serving engine's delta overlay.
+        # ``journal_base`` is the absolute position of journal[0]: refresh
+        # truncates consumed prefixes (bounding memory under sustained
+        # writes) while mirror epochs — absolute positions — stay monotonic.
+        self.journal: list[JournalEntry] = []
+        self.journal_base = 0
+
+    @property
+    def journal_end(self) -> int:
+        """Absolute journal position of the next entry to be appended."""
+        return self.journal_base + len(self.journal)
+
+    def smo_state(self) -> tuple[int, int, int, int]:
+        """SMO fingerprint: unchanged iff the inner structure and the leaf
+        set are unchanged (leaf unlinks shrink the leaf-dict length)."""
+        return (self.smo_leaf_splits, self.smo_node_creates,
+                self.smo_adjusts, len(self.leaf_count))
 
     # ------------------------------------------------------------------ leaves
     def _new_leaf(self) -> int:
@@ -338,6 +369,8 @@ class Aulid(OrderedIndex):
         assert np.all(keys[1:] >= keys[:-1]), "bulkload requires sorted keys"
         n = len(keys)
         self.n_items = n
+        self.journal_base += len(self.journal)
+        self.journal.clear()
         fill = max(1, int(self.cfg.leaf_capacity * self.cfg.leaf_fill))
         nleaves = max(1, -(-n // fill))
         entry_keys = np.zeros(max(nleaves - 1, 0), dtype=np.uint64)
@@ -615,6 +648,7 @@ class Aulid(OrderedIndex):
             self.first_leaf = self.last_leaf = bid
             self.last_leaf_min = self.last_leaf_max = key
             self.n_items = 1
+            self.journal.append(JournalEntry("insert", key, int(payload), bid))
             dev.set_tag(None)
             return
         dev.read(leaf)
@@ -671,6 +705,7 @@ class Aulid(OrderedIndex):
         self.leaf_count[leaf] = c + 1
         self._write_leaf(leaf)
         self.n_items += 1
+        self.journal.append(JournalEntry("insert", key, int(payload), leaf))
         if leaf == self.last_leaf:
             self.last_leaf_min = self._leaf_min(leaf)
             self.last_leaf_max = self._leaf_max(leaf)
@@ -861,6 +896,7 @@ class Aulid(OrderedIndex):
         self.leaf_count[leaf] = c - 1
         self._write_leaf(leaf)
         self.n_items -= 1
+        self.journal.append(JournalEntry("delete", key, 0, leaf))
         if leaf == self.last_leaf and self.leaf_count[leaf] > 0:
             self.last_leaf_min = self._leaf_min(leaf)
             self.last_leaf_max = self._leaf_max(leaf)
@@ -958,6 +994,7 @@ class Aulid(OrderedIndex):
         if i < c and int(self.leaf_keys[leaf][i]) == key:
             self.leaf_pay[leaf][i] = payload
             self._write_leaf(leaf)
+            self.journal.append(JournalEntry("update", key, int(payload), leaf))
             return True
         return False
 

@@ -1,0 +1,140 @@
+"""Device-resident sorted delta overlay over a frozen :class:`DeviceIndex`.
+
+The device mirror (``device_index.py``) is an immutable snapshot: before this
+subsystem, a single host insert invalidated the whole mirror and forced an
+O(n) rebuild before the next batched lookup.  The overlay decouples update
+cost from mirror rebuilds (DESIGN.md §3): writes since the last snapshot are
+absorbed into a small sorted (key, payload, tombstone) array that the batched
+read path merge-consults — an overlay hit wins over the snapshot, a tombstone
+hides the key, and scans two-way-merge the leaf chain with the overlay range.
+
+The overlay is folded back into a fresh snapshot only when it grows past
+``gamma * n`` (the engine's compaction policy — the same shape as AULID's own
+Adjust criterion, paper §4.4: amortize structural work against a fraction of
+the data it covers).
+
+Semantics are those of a unique-key ordered map (the serving engine applies
+upserts; AULID's duplicate-key multiset is exercised by the host-path tests):
+
+* ``record_insert``/``record_update`` — upsert; clears any tombstone;
+* ``record_delete`` — tombstone; hides the key whether it lives in the
+  snapshot, the overlay, or both.
+
+Host mutation is dict-based (O(1) per write); the sorted, padded device
+arrays are materialized lazily per engine step and cached until dirtied.
+Padded capacity grows geometrically so jitted consumers see few shapes.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import numpy as np
+
+UINT64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+MIN_CAPACITY = 64
+
+
+class DeltaOverlay:
+    """Sorted write-absorbing overlay merged into batched device reads.
+
+    ``min_capacity`` floors the padded device capacity: sizing it near the
+    compaction threshold (``gamma * n``) keeps the jit shape of the merged
+    read path constant for the overlay's whole lifetime (one compile).
+    """
+
+    __slots__ = ("_map", "_cache", "_min_cap", "n_upserts", "n_tombstones")
+
+    def __init__(self, min_capacity: int = MIN_CAPACITY) -> None:
+        self._map: dict[int, tuple[int, bool]] = {}  # key -> (payload, tomb)
+        self._cache: Optional[dict[str, np.ndarray]] = None
+        self._min_cap = max(int(min_capacity), 1)
+        self.n_upserts = 0
+        self.n_tombstones = 0
+
+    @classmethod
+    def for_threshold(cls, threshold: float) -> "DeltaOverlay":
+        """Overlay whose capacity floor covers a compaction threshold (e.g.
+        ``gamma * n``) — the jitted read path then compiles once per
+        snapshot instead of once per capacity doubling."""
+        cap = MIN_CAPACITY
+        while cap < threshold:
+            cap <<= 1
+        return cls(min_capacity=cap)
+
+    # ------------------------------------------------------------- mutation
+    def record_insert(self, key: int, payload: int) -> None:
+        self._map[int(key)] = (int(payload), False)
+        self._cache = None
+        self.n_upserts += 1
+
+    record_update = record_insert
+
+    def record_delete(self, key: int) -> None:
+        self._map[int(key)] = (0, True)
+        self._cache = None
+        self.n_tombstones += 1
+
+    def clear(self) -> None:
+        """Drop all entries (after a compaction folded them into a snapshot)."""
+        self._map.clear()
+        self._cache = None
+
+    # ---------------------------------------------------------------- reads
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def __contains__(self, key: int) -> bool:
+        return int(key) in self._map
+
+    def get(self, key: int) -> Optional[tuple[int, bool]]:
+        """(payload, tombstone) for an overlaid key, else None."""
+        return self._map.get(int(key))
+
+    def live_items(self) -> Iterable[tuple[int, int]]:
+        """Sorted (key, payload) pairs that are not tombstones."""
+        for k in sorted(self._map):
+            pay, tomb = self._map[k]
+            if not tomb:
+                yield k, pay
+
+    def range_items(self, start_key: int) -> list[tuple[int, int, bool]]:
+        """Sorted (key, payload, tomb) with key >= start_key (host merge twin)."""
+        return [(k, *self._map[k]) for k in sorted(self._map)
+                if k >= int(start_key)]
+
+    # --------------------------------------------------------- device arrays
+    @property
+    def capacity(self) -> int:
+        """Padded device capacity: next power of two >= len (few jit shapes)."""
+        cap = self._min_cap
+        while cap < len(self._map):
+            cap <<= 1
+        return cap
+
+    def arrays(self) -> dict[str, np.ndarray]:
+        """Sorted, padded pools for the device merge path (``lookup.py``).
+
+        ``ov_keys`` is UINT64_MAX-padded so the whole-array compare used for
+        probing (the ``leaf_search`` idiom) never counts padding AND padding
+        doubles as the occupancy mask; real keys must therefore be
+        < 2**64-1 (also required by the leaf pools).
+        """
+        if self._cache is None:
+            cap = self.capacity
+            keys = np.full(cap, UINT64_MAX, dtype=np.uint64)
+            pays = np.zeros(cap, dtype=np.uint64)
+            tomb = np.zeros(cap, dtype=bool)
+            n = len(self._map)
+            if n:
+                # dict iteration order aligns keys() with values()
+                uk = np.fromiter(self._map.keys(), dtype=np.uint64, count=n)
+                up = np.fromiter((v[0] for v in self._map.values()),
+                                 dtype=np.uint64, count=n)
+                ut = np.fromiter((v[1] for v in self._map.values()),
+                                 dtype=bool, count=n)
+                order = np.argsort(uk)
+                keys[:n] = uk[order]
+                pays[:n] = up[order]
+                tomb[:n] = ut[order]
+            self._cache = {"ov_keys": keys, "ov_pay": pays, "ov_tomb": tomb}
+        return self._cache

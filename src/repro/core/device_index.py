@@ -70,6 +70,17 @@ class DeviceIndex:
     last_leaf_min: np.uint64
     inner_height: int
     leaf_rows: dict[int, int] = dataclasses.field(default_factory=dict, repr=False)
+    # snapshot epoch (DESIGN.md §3): journal position + SMO fingerprint of the
+    # host index at snapshot time — drives the incremental refresh fast path
+    journal_epoch: int = 0
+    smo_state: tuple[int, int, int, int] = (0, 0, 0, 0)
+    refreshes: int = 0        # fast-path refreshes applied to this mirror
+    full_builds: int = 1      # full enumerations (this snapshot counts as one)
+    # leaf rows re-mirrored by the latest refresh: None after a full build
+    # (everything changed), an index array after the fast path — consumers
+    # holding device copies update only these rows (IndexEngine.compact)
+    last_touched_rows: "np.ndarray | None" = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def max_inner_height(self) -> int:
@@ -224,4 +235,68 @@ def build_device_index(idx: Aulid) -> DeviceIndex:
         leaf_next=leaf_next, root_node=0 if idx.root is not None else -1,
         last_leaf_row=last_row, last_leaf_min=np.uint64(idx.last_leaf_min),
         inner_height=height, leaf_rows=rows,
+        journal_epoch=idx.journal_end, smo_state=idx.smo_state(),
     )
+
+
+def refresh_device_index(idx: Aulid, di: DeviceIndex) -> DeviceIndex:
+    """Bring a mirror up to date with the host, incrementally when possible.
+
+    Fast path (DESIGN.md §3): when no structure-modifying operation happened
+    since ``di`` was snapshotted (leaf splits, node creates, Adjusts, and leaf
+    unlinks all change the SMO fingerprint), every journaled write only edited
+    the *content* of an existing leaf block — so re-mirroring the touched leaf
+    rows (plus the metanode's ``last_leaf_min``) is exact.  Cost is
+    O(touched leaves × leaf_capacity) instead of the full-tree O(n)
+    enumeration; the mirror is mutated in place and returned, with the
+    touched rows recorded in ``last_touched_rows`` so device-side copies can
+    be patched instead of re-uploaded.
+
+    Anything structural falls back to :func:`build_device_index`.
+
+    Either way the consumed journal prefix is truncated (the journal would
+    otherwise grow without bound under sustained writes).  Epochs are
+    ABSOLUTE journal positions (``Aulid.journal_base`` tracks truncation),
+    so a different mirror snapshotted at an older epoch sees its entries
+    are gone (``journal_epoch < journal_base``) and takes the full-build
+    path instead of silently skipping the truncated writes.
+    """
+    def consume() -> None:
+        idx.journal_base += len(idx.journal)
+        idx.journal.clear()
+
+    def full() -> DeviceIndex:
+        consume()
+        ndi = build_device_index(idx)
+        ndi.refreshes = di.refreshes
+        ndi.full_builds = di.full_builds + 1
+        return ndi
+
+    start = di.journal_epoch - idx.journal_base
+    if start < 0 or idx.journal_end < di.journal_epoch \
+            or idx.smo_state() != di.smo_state:
+        return full()            # bulkload, SMO, or truncated-away entries
+    if start == len(idx.journal):
+        di.last_touched_rows = np.empty(0, dtype=np.int64)
+        return di                # already current: no-op
+    touched = {e.leaf for e in idx.journal[start:]}
+    if not touched.issubset(di.leaf_rows.keys()):
+        return full()
+    cap = di.leaf_keys.shape[1]
+    rows = []
+    for bid in touched:
+        r = di.leaf_rows[bid]
+        c = idx.leaf_count[bid]
+        di.leaf_keys[r, :c] = idx.leaf_keys[bid][:c]
+        di.leaf_keys[r, c:] = UINT64_MAX
+        di.leaf_pay[r, :c] = idx.leaf_pay[bid][:c]
+        di.leaf_pay[r, c:] = 0
+        di.leaf_count[r] = c
+        rows.append(r)
+        assert c <= cap
+    di.last_leaf_min = np.uint64(idx.last_leaf_min)
+    consume()                    # bounded journal (see docstring)
+    di.journal_epoch = idx.journal_base
+    di.refreshes += 1
+    di.last_touched_rows = np.array(sorted(rows), dtype=np.int64)
+    return di

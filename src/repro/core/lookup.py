@@ -23,6 +23,7 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
+from .delta_overlay import DeltaOverlay  # noqa: E402
 from .device_index import DeviceIndex  # noqa: E402
 
 
@@ -166,3 +167,124 @@ def scan_batch(arrs: dict, q: jnp.ndarray, count: int = 100, height: int = 3,
     pays = jnp.take_along_axis(out_p, order, axis=1)
     vmask = jnp.take_along_axis(out_v, order, axis=1)
     return keys, pays, vmask
+
+
+# --------------------------------------------------------------------- overlay
+# Merge-consultation of a DeltaOverlay (DESIGN.md §3): the snapshot mirror
+# stays frozen; writes since the snapshot live in a small sorted overlay that
+# the batched read path consults with one whole-array compare (the same
+# "one block fetch + whole-block search" idiom as the leaf step — the Pallas
+# twin is repro.kernels.overlay_probe).
+
+
+def overlay_arrays(ov: DeltaOverlay) -> dict[str, jnp.ndarray]:
+    """Move the overlay pools to device as ONE packed (3, cap) u64 transfer
+    (keys, payloads, tombstones) — called once per engine step, so dispatch
+    overhead matters more than layout elegance."""
+    a = ov.arrays()
+    pack = np.empty((3, a["ov_keys"].shape[0]), dtype=np.uint64)
+    pack[0] = a["ov_keys"]
+    pack[1] = a["ov_pay"]
+    pack[2] = a["ov_tomb"]
+    return {"ov_pack": jnp.asarray(pack)}
+
+
+def update_leaf_rows(arrs: dict, di: DeviceIndex) -> dict:
+    """Patch device copies of the leaf pools after a fast-path refresh.
+
+    ``refresh_device_index`` records the re-mirrored rows in
+    ``di.last_touched_rows``; uploading just those (plus the metanode's
+    ``last_leaf_min``) keeps compaction's device cost O(touched) instead of
+    re-transferring every pool.  Falls back to a full ``device_arrays`` when
+    the last refresh was a full build (``last_touched_rows is None``).
+    """
+    rows = di.last_touched_rows
+    if rows is None:
+        return device_arrays(di)
+    if len(rows):
+        r = jnp.asarray(rows)
+        arrs = dict(arrs)
+        arrs["leaf_keys"] = arrs["leaf_keys"].at[r].set(
+            jnp.asarray(di.leaf_keys[rows]))
+        arrs["leaf_pay"] = arrs["leaf_pay"].at[r].set(
+            jnp.asarray(di.leaf_pay[rows]))
+        arrs["leaf_count"] = arrs["leaf_count"].at[r].set(
+            jnp.asarray(di.leaf_count[rows]))
+        arrs["last_leaf_min"] = jnp.asarray(di.last_leaf_min)
+    return arrs
+
+
+def _overlay_unpack(ovr: dict):
+    pack = ovr["ov_pack"]
+    return pack[0], pack[1], pack[2] != 0   # keys, payloads, tombstones
+
+
+def _overlay_probe(ovr: dict, q: jnp.ndarray):
+    """For each query: (hit, tombstone, payload) from the sorted overlay.
+    Padding keys are u64-max so they never match a (valid) query key.
+    searchsorted keeps temporaries O(Q) — a (Q, cap) broadcast compare
+    thrashes the CPU backend's allocator hard enough to tax the *next*
+    host-side step (measured 5x on the serving loop)."""
+    keys, pays, tombs = _overlay_unpack(ovr)
+    cap = keys.shape[0]
+    pos = jnp.searchsorted(keys, q, side="left").astype(jnp.int32)
+    posc = jnp.clip(pos, 0, cap - 1)
+    hit = (pos < cap) & (jnp.take(keys, posc) == q)
+    tomb = hit & jnp.take(tombs, posc)
+    pay = jnp.take(pays, posc)
+    return hit, tomb, pay
+
+
+@functools.partial(jax.jit, static_argnames=("height",))
+def lookup_batch_overlay(arrs: dict, ovr: dict, q: jnp.ndarray, height: int = 3):
+    """Batched point lookup over snapshot + overlay. Overlay hit wins; a
+    tombstone hides the key even when the snapshot still stores it.
+    Returns (payload u64, found bool, leaf_row i32) like ``lookup_batch``."""
+    q = q.astype(jnp.uint64)
+    pay, found, leaf = lookup_batch(arrs, q, height=height)
+    hit, tomb, opay = _overlay_probe(ovr, q)
+    pay = jnp.where(hit & ~tomb, opay, pay)
+    found = jnp.where(hit, ~tomb, found)
+    return jnp.where(found, pay, 0), found, leaf
+
+
+@functools.partial(jax.jit, static_argnames=("height", "count", "max_blocks"))
+def scan_batch_overlay(arrs: dict, ovr: dict, q: jnp.ndarray, count: int = 100,
+                       height: int = 3, max_blocks: int | None = None):
+    """Batched range scan over snapshot + overlay (two-way sorted merge).
+
+    Fetches ``count + overlay_capacity`` snapshot candidates (the overlay can
+    hide at most ``capacity`` of them via tombstones/upserts), drops snapshot
+    keys the overlay overrides, unions in the overlay's live in-range entries,
+    and re-sorts — the device twin of the host's leaf-chain + overlay merge.
+    Returns (keys (Q,count), payloads, valid mask)."""
+    q = q.astype(jnp.uint64)
+    keys, pays, tombs = _overlay_unpack(ovr)
+    cap = keys.shape[0]
+    base = count + cap
+    if max_blocks is not None:
+        # the caller sized max_blocks for `count`; widen it for the extra
+        # `cap` snapshot candidates this merge needs or tombstones could
+        # silently starve the window
+        leaf_cap = arrs["leaf_keys"].shape[1]
+        max_blocks = max_blocks + cap // max(leaf_cap // 2, 1) + 1
+    ks, ps, vs = scan_batch(arrs, q, count=base, height=height,
+                            max_blocks=max_blocks)
+    # snapshot entries whose key the overlay owns (upsert or tombstone) lose
+    pos = jnp.searchsorted(keys, ks, side="left").astype(jnp.int32)
+    owned = (pos < cap) & (jnp.take(keys, jnp.clip(pos, 0, cap - 1)) == ks)
+    vs = vs & ~owned
+    # overlay live entries in range, broadcast per query (u64-max padding
+    # doubles as the occupancy mask)
+    Q = q.shape[0]
+    in_ov = keys[None, :] != jnp.uint64(0xFFFFFFFFFFFFFFFF)
+    ov_v = in_ov & ~tombs[None, :] & (keys[None, :] >= q[:, None])
+    comb_k = jnp.concatenate([ks, jnp.broadcast_to(keys[None, :], (Q, cap))], axis=1)
+    comb_p = jnp.concatenate(
+        [ps, jnp.broadcast_to(pays[None, :], (Q, cap))], axis=1)
+    comb_v = jnp.concatenate([vs, ov_v], axis=1)
+    sort_k = jnp.where(comb_v, comb_k, jnp.uint64(0xFFFFFFFFFFFFFFFF))
+    order = jnp.argsort(sort_k, axis=1, stable=True)[:, :count]
+    return (jnp.take_along_axis(comb_k, order, axis=1),
+            jnp.take_along_axis(comb_p, order, axis=1),
+            jnp.take_along_axis(comb_v, order, axis=1))

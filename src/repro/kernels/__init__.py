@@ -19,6 +19,8 @@ TPU); the pallas_call/BlockSpec structure is the deployable artifact.
 """
 from .leaf_search.ops import leaf_search
 from .inner_probe.ops import inner_probe_lookup
+from .overlay_probe.ops import overlay_probe
 from .paged_attention.ops import paged_attention
 
-__all__ = ["leaf_search", "inner_probe_lookup", "paged_attention"]
+__all__ = ["leaf_search", "inner_probe_lookup", "overlay_probe",
+           "paged_attention"]

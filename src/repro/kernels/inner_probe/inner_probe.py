@@ -41,7 +41,8 @@ def _lt(ah, al, bh, bl):
 def _gather(row, idx):
     """row (1,SPB); idx scalar -> row[0, idx] via one-hot reduce (VPU)."""
     onehot = jax.lax.broadcasted_iota(jnp.int32, (1, SPB), 1)[0] == idx
-    return jnp.sum(jnp.where(onehot, row[0, :], jnp.zeros_like(row[0, :])))
+    return jnp.sum(jnp.where(onehot, row[0, :], jnp.zeros_like(row[0, :])),
+                   dtype=row.dtype)
 
 
 def _kernel(blk_ref,                          # scalar-prefetch (Q,) i32

@@ -44,14 +44,14 @@ def _kernel(rows_ref,                        # scalar-prefetch (Q,) i32
     # position of the first key >= q == number of keys < q (padding is
     # 0xFFFFFFFF planes == u64 max, so padded slots never count)
     lt = _lt(kh, kl, qh, ql)
-    pos = jnp.sum(lt.astype(jnp.int32))
+    pos = jnp.sum(lt.astype(jnp.int32), dtype=jnp.int32)
     C = kh.shape[0]
     onehot = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)[0] == pos
-    hit_h = jnp.sum(jnp.where(onehot, kh, jnp.uint32(0)))
-    hit_l = jnp.sum(jnp.where(onehot, kl, jnp.uint32(0)))
+    hit_h = jnp.sum(jnp.where(onehot, kh, jnp.uint32(0)), dtype=jnp.uint32)
+    hit_l = jnp.sum(jnp.where(onehot, kl, jnp.uint32(0)), dtype=jnp.uint32)
     found = (pos < C) & (hit_h == qh) & (hit_l == ql)
-    oh_ref[0, 0] = jnp.sum(jnp.where(onehot, ph_ref[0, :], jnp.uint32(0)))
-    ol_ref[0, 0] = jnp.sum(jnp.where(onehot, pl_ref[0, :], jnp.uint32(0)))
+    oh_ref[0, 0] = jnp.sum(jnp.where(onehot, ph_ref[0, :], jnp.uint32(0)), dtype=jnp.uint32)
+    ol_ref[0, 0] = jnp.sum(jnp.where(onehot, pl_ref[0, :], jnp.uint32(0)), dtype=jnp.uint32)
     of_ref[0, 0] = found.astype(jnp.int32)
 
 

@@ -9,14 +9,14 @@ def leaf_search_ref(rows, qh, ql, keys_hi, keys_lo, pay_hi, pay_lo):
     kh = jnp.take(keys_hi, rows, axis=0)      # (Q, C)
     kl = jnp.take(keys_lo, rows, axis=0)
     lt = (kh < qh[:, None]) | ((kh == qh[:, None]) & (kl < ql[:, None]))
-    pos = jnp.sum(lt.astype(jnp.int32), axis=1)
+    pos = jnp.sum(lt.astype(jnp.int32), axis=1, dtype=jnp.int32)
     C = kh.shape[1]
     onehot = jnp.arange(C, dtype=jnp.int32)[None, :] == pos[:, None]
-    hit_h = jnp.sum(jnp.where(onehot, kh, jnp.uint32(0)), axis=1)
-    hit_l = jnp.sum(jnp.where(onehot, kl, jnp.uint32(0)), axis=1)
+    hit_h = jnp.sum(jnp.where(onehot, kh, jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+    hit_l = jnp.sum(jnp.where(onehot, kl, jnp.uint32(0)), axis=1, dtype=jnp.uint32)
     found = (pos < C) & (hit_h == qh) & (hit_l == ql)
     ph = jnp.sum(jnp.where(onehot, jnp.take(pay_hi, rows, axis=0),
-                           jnp.uint32(0)), axis=1)
+                           jnp.uint32(0)), axis=1, dtype=jnp.uint32)
     pl_ = jnp.sum(jnp.where(onehot, jnp.take(pay_lo, rows, axis=0),
-                            jnp.uint32(0)), axis=1)
+                            jnp.uint32(0)), axis=1, dtype=jnp.uint32)
     return ph, pl_, found

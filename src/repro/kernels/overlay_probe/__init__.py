@@ -1,0 +1,3 @@
+from .ops import overlay_probe
+
+__all__ = ["overlay_probe"]

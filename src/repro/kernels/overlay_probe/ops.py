@@ -1,0 +1,28 @@
+"""Public wrapper: u64 <-> u32-plane packing around the overlay_probe kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..leaf_search.ops import join_u64, split_u64
+from .overlay_probe import overlay_probe_planes
+from .ref import overlay_probe_ref
+
+
+def overlay_probe(ov_arrays: dict, queries: np.ndarray, *,
+                  interpret: bool = True, use_ref: bool = False):
+    """Probe a DeltaOverlay's padded pools (``DeltaOverlay.arrays()``).
+
+    Returns (payload u64, hit bool, tombstoned bool): ``hit`` means the
+    overlay owns the key; callers take the overlay payload when
+    ``hit & ~tombstoned``, report a miss when ``tombstoned``, and fall back
+    to the snapshot mirror otherwise.
+    """
+    kh, kl = split_u64(ov_arrays["ov_keys"])
+    ph, pl_ = split_u64(ov_arrays["ov_pay"])
+    tomb = np.asarray(ov_arrays["ov_tomb"]).astype(np.int32)
+    qh, ql = split_u64(np.asarray(queries, dtype=np.uint64))
+    fn = overlay_probe_ref if use_ref else (
+        lambda *a: overlay_probe_planes(*a, interpret=interpret))
+    oh, ol, hit, tb = fn(qh, ql, kh, kl, ph, pl_, tomb)
+    return (join_u64(np.asarray(oh), np.asarray(ol)), np.asarray(hit),
+            np.asarray(tb))

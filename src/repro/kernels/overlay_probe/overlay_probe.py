@@ -1,0 +1,94 @@
+"""Pallas kernel: sorted delta-overlay probe (DESIGN.md §3).
+
+The serving engine's read path must consult the small sorted overlay of
+writes-since-snapshot before trusting the frozen mirror.  On TPU this is the
+same primitive as the leaf step (``repro.kernels.leaf_search``): fetch one
+sorted block, whole-block compare-and-reduce on the VPU — except the "block"
+is the overlay itself, which is identical for every query, so its tiles load
+into VMEM once and stay resident across the whole grid (the BlockSpec index
+map is constant).
+
+Per query the kernel returns the merge verdict the jnp path computes in
+``repro.core.lookup._overlay_probe``:
+
+* ``hit``  — the query key is overlaid,
+* ``tomb`` — ... by a tombstone (key deleted since the snapshot),
+* payload planes — the overlaid payload when hit and not tombstoned.
+
+uint64 keys travel as two u32 planes (no 64-bit lanes on TPU); padding is
+0xFFFFFFFF planes == u64-max so padded slots never match a valid key.
+VMEM working set: 5 x (1, K) u32/i32 tiles — a 4096-entry overlay is 80 KB,
+far under budget, and K stays small by construction (compaction folds the
+overlay into a fresh snapshot at ``gamma * n`` entries).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lt(ah, al, bh, bl):
+    """(ah,al) < (bh,bl) lexicographic on u32 planes."""
+    return (ah < bh) | ((ah == bh) & (al < bl))
+
+
+def _kernel(qh_ref, ql_ref,              # (1, 1) u32 query planes
+            kh_ref, kl_ref,              # (1, K) u32 overlay key planes
+            ph_ref, pl_ref,              # (1, K) u32 overlay payload planes
+            tb_ref,                      # (1, K) i32 tombstone flags
+            oh_ref, ol_ref,              # (1, 1) u32 payload planes out
+            hit_ref, tomb_ref):          # (1, 1) i32 verdicts out
+    qh = qh_ref[0, 0]
+    ql = ql_ref[0, 0]
+    kh = kh_ref[0, :]
+    kl = kl_ref[0, :]
+    # position of the first key >= q == number of keys < q (u64-max padding
+    # never counts, so pos == K means "query greater than every overlay key")
+    lt = _lt(kh, kl, qh, ql)
+    pos = jnp.sum(lt.astype(jnp.int32), dtype=jnp.int32)
+    K = kh.shape[0]
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)[0] == pos
+    hit_h = jnp.sum(jnp.where(onehot, kh, jnp.uint32(0)), dtype=jnp.uint32)
+    hit_l = jnp.sum(jnp.where(onehot, kl, jnp.uint32(0)), dtype=jnp.uint32)
+    hit = (pos < K) & (hit_h == qh) & (hit_l == ql)
+    tomb = hit & (jnp.sum(jnp.where(onehot, tb_ref[0, :], 0), dtype=jnp.int32) > 0)
+    oh_ref[0, 0] = jnp.sum(jnp.where(onehot, ph_ref[0, :], jnp.uint32(0)), dtype=jnp.uint32)
+    ol_ref[0, 0] = jnp.sum(jnp.where(onehot, pl_ref[0, :], jnp.uint32(0)), dtype=jnp.uint32)
+    hit_ref[0, 0] = hit.astype(jnp.int32)
+    tomb_ref[0, 0] = tomb.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def overlay_probe_planes(qh: jnp.ndarray, ql: jnp.ndarray,
+                         keys_hi: jnp.ndarray, keys_lo: jnp.ndarray,
+                         pay_hi: jnp.ndarray, pay_lo: jnp.ndarray,
+                         tomb: jnp.ndarray, *, interpret: bool = True):
+    """q planes (Q,) u32; overlay planes (K,) u32; tomb (K,) i32. Returns
+    (pay_hi (Q,), pay_lo (Q,), hit (Q,) bool, tombstoned (Q,) bool)."""
+    Q = qh.shape[0]
+    K = keys_hi.shape[0]
+    qh2 = qh.reshape(Q, 1)
+    ql2 = ql.reshape(Q, 1)
+    ov2 = lambda a: a.reshape(1, K)
+    qspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    ospec = pl.BlockSpec((1, K), lambda i: (0, 0))  # resident across the grid
+    out = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    oh, ol, hit, tb = pl.pallas_call(
+        _kernel,
+        grid=(Q,),
+        in_specs=[qspec, qspec, ospec, ospec, ospec, ospec, ospec],
+        out_specs=[out, out, out, out],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qh2, ql2, ov2(keys_hi), ov2(keys_lo), ov2(pay_hi), ov2(pay_lo),
+      ov2(tomb.astype(jnp.int32)))
+    return oh[:, 0], ol[:, 0], hit[:, 0].astype(bool), tb[:, 0].astype(bool)

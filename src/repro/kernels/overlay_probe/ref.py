@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the overlay_probe kernel (identical plane semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def overlay_probe_ref(qh, ql, keys_hi, keys_lo, pay_hi, pay_lo, tomb):
+    """Vectorized reference: same inputs/outputs as overlay_probe_planes."""
+    lt = (keys_hi[None, :] < qh[:, None]) | (
+        (keys_hi[None, :] == qh[:, None]) & (keys_lo[None, :] < ql[:, None]))
+    pos = jnp.sum(lt.astype(jnp.int32), axis=1, dtype=jnp.int32)
+    K = keys_hi.shape[0]
+    onehot = jnp.arange(K, dtype=jnp.int32)[None, :] == pos[:, None]
+    hit_h = jnp.sum(jnp.where(onehot, keys_hi[None, :], jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+    hit_l = jnp.sum(jnp.where(onehot, keys_lo[None, :], jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+    hit = (pos < K) & (hit_h == qh) & (hit_l == ql)
+    tb = hit & (jnp.sum(jnp.where(onehot, tomb[None, :].astype(jnp.int32), 0),
+                        axis=1, dtype=jnp.int32) > 0)
+    oh = jnp.sum(jnp.where(onehot, pay_hi[None, :], jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+    ol = jnp.sum(jnp.where(onehot, pay_lo[None, :], jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+    return oh, ol, hit, tb

@@ -102,8 +102,8 @@ def _init_leaf(key, spec: Spec, path: str) -> jnp.ndarray:
 
 def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
     specs = param_specs(cfg)
-    leaves, treedef = jax.tree.flatten_with_path(specs,
-                                                 is_leaf=lambda x: isinstance(x, Spec))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, Spec))
     keys = jax.random.split(key, len(leaves))
     vals = [_init_leaf(k, spec, jax.tree_util.keystr(p))
             for k, (p, spec) in zip(keys, leaves)]

@@ -1,5 +1,8 @@
-"""Serving substrate: learned paged-KV cache + continuous batching engine."""
+"""Serving substrate: learned paged-KV cache + continuous batching engine
++ the mixed read/write index engine over the incremental device mirror."""
 from .kv_cache import LearnedPageTable, PagePool
 from .engine import ServeEngine, Request
+from .index_engine import IndexEngine, IndexRequest
 
-__all__ = ["LearnedPageTable", "PagePool", "ServeEngine", "Request"]
+__all__ = ["LearnedPageTable", "PagePool", "ServeEngine", "Request",
+           "IndexEngine", "IndexRequest"]

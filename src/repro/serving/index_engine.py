@@ -1,0 +1,222 @@
+"""Mixed read/write serving engine over AULID + the incremental device mirror.
+
+The ROADMAP north-star is serving heavy mixed traffic; the paper's headline
+claim (§4.4, §5.3) is that AULID stays fast *under updates*.  This engine is
+the piece that makes the JAX read path honor that claim (DESIGN.md §3): before
+it, one host insert froze out the device mirror until an O(n) rebuild.
+
+Request flow per :meth:`step`:
+
+1. drain the queue, partitioning into writes and reads (step-level
+   consistency: every write queued before the step is visible to every read
+   executed in it — the oracle the property tests assert against);
+2. apply writes to the host ``Aulid`` (which journals them) *and* to the
+   ``DeltaOverlay`` — the device mirror itself is untouched;
+3. compaction policy: once ``len(overlay) >= gamma * n`` the overlay is
+   folded into a fresh snapshot via ``refresh_device_index`` (the journal
+   fast path re-mirrors only touched leaf rows when no SMO happened) and
+   cleared — mirroring AULID's own Adjust criterion of amortizing structural
+   work against a fraction of covered data (paper §4.4);
+4. execute all point reads as ONE fused ``lookup_batch_overlay`` device batch
+   and scans as one ``scan_batch_overlay`` batch per scan length.
+
+Write semantics are unique-key upserts (``insert`` overwrites an existing
+key's payload; ``delete`` removes the key) so host, overlay, and device views
+agree under arbitrary interleavings — AULID's duplicate-key multiset remains
+available on the host path directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..core.aulid import Aulid
+from ..core.delta_overlay import DeltaOverlay
+from ..core.device_index import build_device_index, refresh_device_index
+
+
+@dataclasses.dataclass
+class IndexRequest:
+    rid: int
+    op: str                    # "get" | "insert" | "delete" | "scan"
+    key: int
+    payload: int = 0
+    count: int = 0             # scan length
+    result: object = None      # get: payload|None; delete: bool; scan: pairs
+    done: bool = False
+
+
+class IndexEngine:
+    """Batching engine for mixed get/insert/delete/scan over one index."""
+
+    def __init__(self, idx: Aulid, *, gamma: float = 0.05,
+                 auto_compact: bool = True):
+        # imported lazily-adjacent (module import enables jax x64 — keep the
+        # engine importable before the host index is even built)
+        from ..core.lookup import (device_arrays, lookup_batch_overlay,
+                                   overlay_arrays, scan_batch_overlay,
+                                   update_leaf_rows)
+        self._device_arrays = device_arrays
+        self._update_leaf_rows = update_leaf_rows
+        self._overlay_arrays = overlay_arrays
+        self._lookup = lookup_batch_overlay
+        self._scan = scan_batch_overlay
+        self.idx = idx
+        self.gamma = gamma
+        self.auto_compact = auto_compact
+        # capacity floor ~= compaction threshold: one jit shape per lifetime
+        self.overlay = DeltaOverlay.for_threshold(gamma * max(idx.n_items, 1))
+        self.di = build_device_index(idx)
+        self.arrs = self._device_arrays(self.di)
+        self.ov_arrs = self._overlay_arrays(self.overlay)
+        self.queue: list[IndexRequest] = []
+        self.next_rid = 0
+        # serving stats
+        self.steps = 0
+        self.reads_served = 0
+        self.writes_applied = 0
+        self.compactions = 0
+        self.read_batch_sizes: list[int] = []
+        self.serve_seconds = 0.0
+
+    # ------------------------------------------------------------- admission
+    def submit(self, op: str, key: int, payload: int = 0,
+               count: int = 0) -> IndexRequest:
+        assert op in ("get", "insert", "delete", "scan"), op
+        req = IndexRequest(self.next_rid, op, int(key), int(payload),
+                           int(count))
+        self.next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def get(self, key: int) -> IndexRequest:
+        return self.submit("get", key)
+
+    def insert(self, key: int, payload: int) -> IndexRequest:
+        return self.submit("insert", key, payload)
+
+    def delete(self, key: int) -> IndexRequest:
+        return self.submit("delete", key)
+
+    def scan(self, key: int, count: int = 100) -> IndexRequest:
+        return self.submit("scan", key, count=count)
+
+    # ------------------------------------------------------------ write path
+    def _apply_write(self, req: IndexRequest) -> None:
+        if req.op == "insert":           # unique-key upsert (module docstring)
+            if not self.idx.update(req.key, req.payload):
+                self.idx.insert(req.key, req.payload)
+            self.overlay.record_insert(req.key, req.payload)
+            req.result = True
+        else:
+            req.result = self.idx.delete(req.key)
+            self.overlay.record_delete(req.key)
+        req.done = True
+        self.writes_applied += 1
+
+    def compact(self) -> None:
+        """Fold the overlay into a fresh snapshot and clear it (DESIGN.md §3).
+
+        After a fast-path refresh only the touched leaf rows are re-uploaded
+        (``update_leaf_rows``); a full rebuild re-transfers every pool."""
+        old = self.di
+        self.di = refresh_device_index(self.idx, old)
+        if self.di is old:
+            self.arrs = self._update_leaf_rows(self.arrs, self.di)
+        else:
+            self.arrs = self._device_arrays(self.di)
+        self.overlay.clear()
+        self._refresh_overlay_arrays()
+        self.compactions += 1
+
+    def _maybe_compact(self) -> None:
+        if self.auto_compact and \
+                len(self.overlay) >= self.gamma * max(self.idx.n_items, 1):
+            self.compact()
+
+    # ------------------------------------------------------------- read path
+    def _height(self) -> int:
+        return max(self.di.max_inner_height, 3)
+
+    def _refresh_overlay_arrays(self) -> None:
+        self.ov_arrs = self._overlay_arrays(self.overlay)
+
+    def _serve_gets(self, gets: list[IndexRequest]) -> None:
+        import jax.numpy as jnp
+        q = jnp.asarray(np.array([r.key for r in gets], dtype=np.uint64))
+        pay, found, _ = self._lookup(self.arrs, self.ov_arrs, q,
+                                     height=self._height())
+        pay = np.asarray(pay)
+        found = np.asarray(found)
+        for i, r in enumerate(gets):
+            r.result = int(pay[i]) if bool(found[i]) else None
+            r.done = True
+        self.reads_served += len(gets)
+        self.read_batch_sizes.append(len(gets))
+
+    def _serve_scans(self, scans: list[IndexRequest]) -> None:
+        import jax.numpy as jnp
+        by_count: dict[int, list[IndexRequest]] = {}
+        for r in scans:
+            by_count.setdefault(r.count or 100, []).append(r)
+        for count, grp in sorted(by_count.items()):
+            q = jnp.asarray(np.array([r.key for r in grp], dtype=np.uint64))
+            ks, ps, valid = self._scan(self.arrs, self.ov_arrs, q,
+                                       count=count, height=self._height())
+            ks, ps, valid = map(np.asarray, (ks, ps, valid))
+            for i, r in enumerate(grp):
+                n = int(valid[i].sum())
+                r.result = list(zip(ks[i][:n].tolist(), ps[i][:n].tolist()))
+                r.done = True
+            self.reads_served += len(grp)
+            self.read_batch_sizes.append(len(grp))
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> int:
+        """Drain the queue: writes (host + overlay), compaction check, then
+        all reads as fused device batches. Returns requests completed."""
+        if not self.queue:
+            return 0
+        t0 = time.perf_counter()
+        batch, self.queue = self.queue, []
+        writes = [r for r in batch if r.op in ("insert", "delete")]
+        gets = [r for r in batch if r.op == "get"]
+        scans = [r for r in batch if r.op == "scan"]
+        for r in writes:
+            self._apply_write(r)
+        if writes:
+            self._maybe_compact()
+            self._refresh_overlay_arrays()
+        if gets:
+            self._serve_gets(gets)
+        if scans:
+            self._serve_scans(scans)
+        self.steps += 1
+        self.serve_seconds += time.perf_counter() - t0
+        return len(batch)
+
+    def run(self) -> int:
+        done = 0
+        while self.queue:
+            done += self.step()
+        return done
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        ops = self.reads_served + self.writes_applied
+        return {
+            "steps": self.steps,
+            "reads_served": self.reads_served,
+            "writes_applied": self.writes_applied,
+            "overlay_len": len(self.overlay),
+            "compactions": self.compactions,
+            "mirror_refreshes": self.di.refreshes,
+            "mirror_full_builds": self.di.full_builds,
+            "mean_read_batch": (float(np.mean(self.read_batch_sizes))
+                                if self.read_batch_sizes else 0.0),
+            "throughput_ops_s": (ops / self.serve_seconds
+                                 if self.serve_seconds else 0.0),
+        }

@@ -1,0 +1,45 @@
+"""Optional-``hypothesis`` shim for the property-based suites.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  Test
+modules import ``given``/``settings``/``st`` from here; when the real package
+is present these are re-exports, otherwise they are stand-ins that let the
+module *collect* normally and turn every ``@given`` test into a clean
+``pytest.importorskip("hypothesis")`` skip at call time — the deterministic
+(non-property) tests in the same file keep running either way.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in hypothesis-less CI
+    HAS_HYPOTHESIS = False
+
+    class _Strategy:
+        """Chainable stub so module-level strategy expressions evaluate."""
+
+        def __getattr__(self, name: str) -> "_Strategy":
+            return self
+
+        def __call__(self, *args: object, **kw: object) -> "_Strategy":
+            return self
+
+    st = _Strategy()  # type: ignore[assignment]
+
+    def given(*args: object, **kw: object):  # type: ignore[misc]
+        def deco(fn):
+            def skipper(*a: object, **k: object) -> None:
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*args: object, **kw: object):  # type: ignore[misc]
+        def deco(fn):
+            return fn
+        return deco
+
+__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st"]

@@ -1,7 +1,8 @@
 """AULID host index: the paper's operations + SMO + read optimizations."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import Aulid, AulidConfig, BlockDevice
 from repro.core.workloads import make_dataset, payloads_for

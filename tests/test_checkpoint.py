@@ -25,8 +25,8 @@ def test_roundtrip(tmp_path, tree):
     out, manifest = restore_checkpoint(p, tree)
     flat_a = {k: v for k, v in np.lib.npyio.__dict__.items()}  # noqa: F841
     import jax
-    for (pa, a), (pb, b) in zip(jax.tree.flatten_with_path(tree)[0],
-                                jax.tree.flatten_with_path(out)[0]):
+    for (pa, a), (pb, b) in zip(jax.tree_util.tree_flatten_with_path(tree)[0],
+                                jax.tree_util.tree_flatten_with_path(out)[0]):
         assert pa == pb
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert manifest["extra"]["loader"]["epoch"] == 1

@@ -2,10 +2,11 @@
 import numpy as np
 import pytest
 
-from repro.core import Aulid
+from repro.core import Aulid, AulidConfig, BlockDevice, DeltaOverlay
 from repro.core.device_index import build_device_index
-from repro.core.lookup import device_arrays, lookup_batch, scan_batch
-from repro.core.workloads import payloads_for
+from repro.core.lookup import (device_arrays, lookup_batch, overlay_arrays,
+                               scan_batch, scan_batch_overlay)
+from repro.core.workloads import make_dataset, payloads_for
 
 import jax.numpy as jnp
 
@@ -67,3 +68,146 @@ def test_scan_batch(datasets):
         assert n == len(exp)
         assert ks[i][: len(exp)].tolist() == [e[0] for e in exp]
         assert ps[i][: len(exp)].tolist() == [e[1] for e in exp]
+
+
+class TestScanEdgeCases:
+    """scan_batch corners: overlay starts, leaf-boundary crossings via
+    leaf_next, and node_overflow_slot continuation (ISSUE 2 satellites)."""
+
+    def _small(self, name="planet", n=4_000):
+        keys = make_dataset(name, n, seed=1)
+        idx = Aulid(BlockDevice(), cfg=AulidConfig(
+            leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15))
+        idx.bulkload(keys, payloads_for(keys))
+        di = build_device_index(idx)
+        return keys, idx, di, device_arrays(di), max(di.max_inner_height, 3)
+
+    def test_scan_crossing_leaf_boundaries(self):
+        """count >> leaf_capacity forces several leaf_next hops per query."""
+        keys, idx, di, arrs, h = self._small()
+        starts = np.array([keys[0], keys[1], keys[17], keys[503],
+                           keys[len(keys) - 70]], dtype=np.uint64)
+        count = 50  # leaf_capacity=16 -> at least 4 sibling links crossed
+        ks, ps, valid = scan_batch(arrs, jnp.asarray(starts), count=count,
+                                   height=h)
+        ks, ps, valid = map(np.asarray, (ks, ps, valid))
+        for i, s in enumerate(starts):
+            exp = idx.scan(int(s), count)
+            n = int(valid[i].sum())
+            assert n == len(exp)
+            assert list(zip(ks[i][:n].tolist(), ps[i][:n].tolist())) == exp
+
+    def test_scan_starting_in_overlay(self):
+        """Scan start keys that exist only in the delta overlay — below the
+        snapshot's key range, between snapshot keys, and past its end."""
+        keys, idx, di, arrs, h = self._small()
+        ov = DeltaOverlay()
+        lo = int(keys[0]) - 100          # below every snapshot key
+        mid = int(keys[10]) + 1          # in a snapshot gap (datasets are
+        assert mid not in set(keys[:20].tolist())   # unique-sorted)
+        hi = int(keys[-1]) + 50          # beyond the last snapshot key
+        for k in (lo, mid, hi):
+            idx.insert(k, k + 9)
+            ov.record_insert(k, k + 9)
+        ovr = overlay_arrays(ov)
+        starts = np.array([lo - 1, lo, mid, hi, hi + 1], dtype=np.uint64)
+        ks, ps, valid = scan_batch_overlay(arrs, ovr, jnp.asarray(starts),
+                                           count=8, height=h)
+        ks, ps, valid = map(np.asarray, (ks, ps, valid))
+        for i, s in enumerate(starts):
+            exp = idx.scan(int(s), 8)
+            n = int(valid[i].sum())
+            got = list(zip(ks[i][:n].tolist(), ps[i][:n].tolist()))
+            assert got == exp, int(s)
+        assert ks[0][0] == lo and ks[1][0] == lo  # truly starts in overlay
+
+    def test_scan_start_at_tombstone(self):
+        keys, idx, di, arrs, h = self._small()
+        ov = DeltaOverlay()
+        dead = int(keys[100])
+        idx.delete(dead)
+        ov.record_delete(dead)
+        starts = np.array([dead, int(keys[99])], dtype=np.uint64)
+        ks, ps, valid = scan_batch_overlay(arrs, overlay_arrays(ov),
+                                           jnp.asarray(starts), count=5,
+                                           height=h)
+        ks, ps, valid = map(np.asarray, (ks, ps, valid))
+        for i, s in enumerate(starts):
+            exp = idx.scan(int(s), 5)
+            n = int(valid[i].sum())
+            assert list(zip(ks[i][:n].tolist(), ps[i][:n].tolist())) == exp
+        assert dead not in ks[0][: int(valid[0].sum())]
+
+    def _deep(self):
+        """Small-geometry index with mixed depth > 1 (hot-region inserts)."""
+        rng = np.random.default_rng(2)
+        keys = np.unique(rng.integers(0, 2**60, 12_000).astype(np.uint64))
+        idx = Aulid(BlockDevice(), cfg=AulidConfig(
+            leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15))
+        idx.bulkload(keys, keys + np.uint64(1))
+        hot = np.unique(rng.integers(10**9, 10**9 + 10**6, 3_000)
+                        ).astype(np.uint64)
+        for k in hot:
+            idx.insert(int(k), int(k) + 1)
+        di = build_device_index(idx)
+        assert di.inner_height >= 2, "need nested mixed nodes for this test"
+        return idx, di
+
+    def test_overflow_slot_threading_invariant(self):
+        """The succ chain of a node's last entry IS the node's overflow
+        continuation (the mirror's on-device twin of the host's ancestor
+        resume stack in Aulid._resolve_slot)."""
+        idx, di = self._deep()
+        checked = 0
+        for i in range(len(di.node_base)):
+            base, fan = int(di.node_base[i]), int(di.node_fanout[i])
+            occ = np.nonzero(di.slot_tag[base: base + fan] != 0)[0]
+            if not occ.size:
+                continue
+            last = base + int(occ[-1])
+            assert int(di.succ_slot[last]) == int(di.node_overflow_slot[i])
+            cont = int(di.node_overflow_slot[i])
+            if cont >= 0:  # continuation entry covers everything under node i
+                assert di.slot_key[cont] >= di.slot_key[last]
+                checked += 1
+        assert checked >= 1, "no node with a live overflow continuation"
+
+    def test_scan_hits_overflow_continuation(self):
+        """Force the node_overflow_slot path: a stale-high MIXED slot key
+        (the on-disk structure's parent max can lag; the mirror recomputes
+        it, so we simulate the lag) routes queries past a child's last
+        entry — the succ/overflow threading must deliver the successor
+        leaf, making lookups and scans exact."""
+        idx, di = self._deep()
+        TAG_MIXED = 4
+        target = -1
+        for g in np.nonzero(di.slot_tag == TAG_MIXED)[0]:
+            if int(di.succ_slot[int(g)]) >= 0:
+                child = int(di.slot_ptr[int(g)])
+                if int(di.node_overflow_slot[child]) >= 0 \
+                        and di.slot_key[int(di.succ_slot[int(g)])] \
+                        > di.slot_key[int(g)] + np.uint64(4):
+                    target = int(g)
+                    break
+        assert target >= 0, "no patchable nested mixed entry found"
+        succ = int(di.succ_slot[target])
+        child_max = int(di.slot_key[target])     # subtree max of the child
+        succ_key = int(di.slot_key[succ])
+        # stale-high parent max: claims the child also covers (max, succ_key]
+        di.slot_key[target] = np.uint64(succ_key - 1)
+        arrs = device_arrays(di)
+        h = max(di.max_inner_height, 3)
+        qs = np.array([child_max + 1, child_max + 2, succ_key - 2],
+                      dtype=np.uint64)
+        qs = qs[qs > child_max]
+        pay, found, _ = lookup_batch(arrs, jnp.asarray(qs), height=h)
+        for i, k in enumerate(qs):
+            exp = idx.lookup(int(k))
+            assert (exp is None) == (not bool(np.asarray(found)[i])), int(k)
+        ks, ps, valid = scan_batch(arrs, jnp.asarray(qs), count=7, height=h)
+        ks, ps, valid = map(np.asarray, (ks, ps, valid))
+        for i, s in enumerate(qs):
+            exp = idx.scan(int(s), 7)
+            n = int(valid[i].sum())
+            got = list(zip(ks[i][:n].tolist(), ps[i][:n].tolist()))
+            assert got == exp, int(s)

@@ -13,6 +13,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute suite; nightly CI runs it
+
 from repro.launch import hlo_analysis as H
 
 REPO = pathlib.Path(__file__).resolve().parents[1]

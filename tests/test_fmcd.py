@@ -1,7 +1,8 @@
 """FMCD model fitting: properties the paper's inner nodes rely on."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.fmcd import LinearModel, conflict_degree, fmcd, min_window_gap
 

@@ -13,6 +13,7 @@ from repro.kernels.inner_probe.ops import ProbeIndex, inner_probe_lookup
 from repro.kernels.inner_probe.inner_probe import probe_level
 from repro.kernels.inner_probe.ref import probe_level_ref
 from repro.kernels.leaf_search.ops import split_u64
+from repro.kernels.overlay_probe.ops import overlay_probe
 from repro.kernels.paged_attention.ops import paged_attention
 
 
@@ -96,6 +97,47 @@ class TestInnerProbe:
         pay, found = inner_probe_lookup(pi, q, interpret=True)
         assert found.all()
         assert (pay == q + 1).all()
+
+
+class TestOverlayProbe:
+    @pytest.mark.parametrize("n_ops", [1, 40, 300])
+    def test_vs_ref_and_host(self, n_ops):
+        from repro.core.delta_overlay import DeltaOverlay
+        rng = np.random.default_rng(n_ops)
+        ov = DeltaOverlay()
+        keys = rng.choice(2**62, n_ops, replace=False)
+        for i, k in enumerate(keys):
+            if i % 4 == 3:
+                ov.record_delete(int(k))
+            else:
+                ov.record_insert(int(k), int(k) + 5)
+        q = np.concatenate([keys, rng.integers(0, 2**62, 64)]).astype(np.uint64)
+        pay, hit, tomb = overlay_probe(ov.arrays(), q, interpret=True)
+        pr, hr, tr = overlay_probe(ov.arrays(), q, use_ref=True)
+        assert (hit == np.asarray(hr)).all()
+        assert (tomb == np.asarray(tr)).all()
+        live = hit & ~tomb
+        assert (pay[live] == np.asarray(pr)[live]).all()
+        for i, k in enumerate(q):
+            e = ov.get(int(k))
+            assert bool(hit[i]) == (e is not None)
+            if e is not None:
+                assert bool(tomb[i]) == e[1]
+                if not e[1]:
+                    assert int(pay[i]) == e[0]
+
+    def test_u64_extremes(self):
+        """Plane-split compares must be exact across the 2**32 boundary."""
+        from repro.core.delta_overlay import DeltaOverlay
+        ov = DeltaOverlay()
+        edge = [0, 2**32 - 1, 2**32, 2**63, 2**64 - 2]
+        for k in edge:
+            ov.record_insert(k, k + 1)
+        q = np.array(edge + [1, 2**33], dtype=np.uint64)
+        pay, hit, tomb = overlay_probe(ov.arrays(), q, interpret=True)
+        assert hit[: len(edge)].all() and not hit[len(edge):].any()
+        assert not tomb.any()
+        assert (pay[: len(edge)] == q[: len(edge)] + 1).all()
 
 
 class TestPagedAttention:

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute suite; nightly CI runs it
+
 from repro.configs import ARCHS, SHAPES, get_config, shapes_for
 from repro.models import model as M
 

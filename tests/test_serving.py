@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute suite; nightly CI runs it
+
 from repro.configs import get_config
 from repro.models import model as M
 from repro.serving import LearnedPageTable, PagePool, Request, ServeEngine

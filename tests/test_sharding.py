@@ -8,6 +8,8 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+pytestmark = pytest.mark.slow  # multi-minute suite; nightly CI runs it
+
 from repro.parallel.sharding import ACT_RULES, PARAM_RULES, spec_for
 
 
