@@ -10,12 +10,51 @@ tree-height regime and relative ranks in minutes on one CPU core; 'paper'
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 import traceback
 
 MODULES = ["workloads", "bulkload", "tail_latency", "scalability",
            "design_read_opts", "design_structures", "adjust_study",
-           "device_lookup", "mixed_serving", "roofline"]
+           "device_lookup", "mixed_serving", "sharded_serving", "roofline"]
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def emit_bench_serving() -> pathlib.Path | None:
+    """Collate the serving benchmarks' saved rows into one machine-readable
+    `BENCH_serving.json` at the repo root: per-engine throughput, p99 step
+    latency, and compaction counts (monolithic vs sharded), so the serving
+    perf trajectory accumulates across PRs (ROADMAP open items)."""
+    from .common import RESULTS_DIR
+    engines = {}
+    meta = {}
+    sharded = RESULTS_DIR / "sharded_serving.json"
+    if sharded.exists():
+        data = json.loads(sharded.read_text())
+        meta["sharded_serving"] = data.get("meta", {})
+        for row in data["rows"]:
+            engines[row["engine"]] = {
+                "shards": row.get("shards", 1),
+                "throughput_ops_s": row.get("throughput_ops_s"),
+                "p99_step_ms": row.get("p99_step_ms"),
+                "mean_step_ms": row.get("mean_step_ms"),
+                "compactions": row.get("compactions"),
+                "mirror_full_builds": row.get("mirror_full_builds"),
+                "mirror_refreshes": row.get("mirror_refreshes"),
+                "p99_speedup_vs_monolithic": row.get("p99_speedup"),
+            }
+    mixed = RESULTS_DIR / "mixed_serving.json"
+    if mixed.exists():
+        meta["mixed_serving"] = json.loads(mixed.read_text()).get("meta", {})
+    if not engines:
+        return None
+    out = REPO_ROOT / "BENCH_serving.json"
+    out.write_text(json.dumps(
+        {"benchmark": "serving", "engines": engines, "meta": meta,
+         "generated": time.strftime("%Y-%m-%d %H:%M:%S")}, indent=1))
+    return out
 
 
 def main():
@@ -37,6 +76,13 @@ def main():
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    # emit only when sharded_serving (the source of both engines' rows) ran
+    # fresh in THIS invocation — re-stamping leftover rows from an old run
+    # would present stale numbers as current
+    if "sharded_serving" in mods and "sharded_serving" not in failures:
+        path = emit_bench_serving()
+        if path is not None:
+            print(f"serving perf snapshot written to {path}", flush=True)
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
         return 1

@@ -34,6 +34,16 @@ UINT64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 MIN_CAPACITY = 64
 
 
+def next_pow2(x: int | float) -> int:
+    """Smallest power of two >= max(x, 1) — the shared shape-bucketing
+    helper of the overlay, the stacked mirror pads, and the serving
+    engines' query/scan buckets."""
+    p = 1
+    while p < x:
+        p <<= 1
+    return p
+
+
 class DeltaOverlay:
     """Sorted write-absorbing overlay merged into batched device reads.
 
@@ -56,10 +66,7 @@ class DeltaOverlay:
         """Overlay whose capacity floor covers a compaction threshold (e.g.
         ``gamma * n``) — the jitted read path then compiles once per
         snapshot instead of once per capacity doubling."""
-        cap = MIN_CAPACITY
-        while cap < threshold:
-            cap <<= 1
-        return cls(min_capacity=cap)
+        return cls(min_capacity=max(MIN_CAPACITY, next_pow2(threshold)))
 
     # ------------------------------------------------------------- mutation
     def record_insert(self, key: int, payload: int) -> None:

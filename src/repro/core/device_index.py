@@ -34,6 +34,7 @@ import numpy as np
 
 from .aulid import (Aulid, BTreeNode, MixedNode, PackedArray,
                     TAG_BT, TAG_DATA, TAG_MIXED, TAG_NULL, TAG_PA)
+from .delta_overlay import next_pow2
 
 UINT64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 
@@ -237,6 +238,159 @@ def build_device_index(idx: Aulid) -> DeviceIndex:
         inner_height=height, leaf_rows=rows,
         journal_epoch=idx.journal_end, smo_state=idx.smo_state(),
     )
+
+
+@dataclasses.dataclass
+class StackedDeviceIndex:
+    """S shard mirrors padded to uniform pool capacities and stacked along a
+    leading ``(S, …)`` axis (DESIGN.md §9).
+
+    The stacked pools feed ``lookup.lookup_batch_sharded``: a ``jax.vmap`` of
+    the unrolled monolithic traversal over the shard axis.  Cross-shard scans
+    do not vmap — they walk ``leaf_next_chain``, a flattened ``(S*L,)`` view
+    of the per-shard sibling links in which each shard's last leaf threads
+    into the first leaf of the next shard that has leaves (the shard-level
+    twin of the mirror's ``succ_slot`` ancestor chain).
+    """
+    bounds: np.ndarray           # (S-1,) u64 inclusive upper key per shard
+    dis: list[DeviceIndex]       # per-shard mirrors (epochs stay shard-local)
+    # stacked pools: the DeviceIndex fields with a leading shard axis
+    slot_tag: np.ndarray         # (S, Smax) u8
+    slot_key: np.ndarray
+    slot_ptr: np.ndarray
+    next_occ: np.ndarray
+    succ_slot: np.ndarray
+    node_base: np.ndarray        # (S, Nmax)
+    node_fanout: np.ndarray
+    node_slope: np.ndarray
+    node_intercept: np.ndarray
+    node_overflow_slot: np.ndarray
+    pa_keys: np.ndarray          # (S, Pmax, pa_cap)
+    pa_ptrs: np.ndarray
+    bt_keys: np.ndarray          # (S, Bmax, bt_cap)
+    bt_ptrs: np.ndarray
+    leaf_keys: np.ndarray        # (S, Lmax, leaf_cap)
+    leaf_pay: np.ndarray
+    leaf_count: np.ndarray       # (S, Lmax)
+    leaf_next: np.ndarray        # (S, Lmax) shard-local rows, -1 at shard end
+    meta: np.ndarray             # (S, 2) [root_node, last_leaf_row]
+    last_leaf_min: np.ndarray    # (S,) u64
+    leaf_next_chain: np.ndarray  # (S*Lmax,) global rows, crosses shards
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.dis)
+
+    @property
+    def max_inner_height(self) -> int:
+        return max(max(di.max_inner_height for di in self.dis), 1)
+
+
+_STACK_2D = [("slot_tag", 0), ("slot_key", UINT64_MAX), ("slot_ptr", -1),
+             ("next_occ", -1), ("succ_slot", -1), ("node_base", 0),
+             ("node_fanout", 1), ("node_slope", 0.0), ("node_intercept", 0.0),
+             ("node_overflow_slot", -1), ("leaf_count", 0), ("leaf_next", -1)]
+_STACK_3D = [("pa_keys", UINT64_MAX), ("pa_ptrs", 0), ("bt_keys", UINT64_MAX),
+             ("bt_ptrs", 0), ("leaf_keys", UINT64_MAX), ("leaf_pay", 0)]
+
+
+def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:
+    out = np.full(shape, fill, dtype=a.dtype)
+    out[tuple(slice(0, d) for d in a.shape)] = a
+    return out
+
+
+def _chain_rows(dis: list[DeviceIndex], Lmax: int) -> np.ndarray:
+    """Precompute the shard-successor leaf chain over the flattened (S*L,)
+    row space: within a shard the local sibling links (offset by s*Lmax);
+    each shard's last leaf continues at row 0 (build order starts at
+    ``first_leaf``) of the next shard that has leaves; leafless padding
+    shards are skipped.  -1 only at the global end."""
+    S = len(dis)
+    chain = np.full(S * Lmax, -1, dtype=np.int32)
+    first_with_leaves = [-1] * S  # global first-leaf row of the next shard
+    nxt = -1
+    for s in range(S - 1, -1, -1):
+        first_with_leaves[s] = nxt
+        if dis[s].leaf_rows:
+            nxt = s * Lmax
+    for s, di in enumerate(dis):
+        L = di.leaf_next.shape[0]
+        local = di.leaf_next.astype(np.int32)
+        rows = np.where(local >= 0, s * Lmax + local, -1)
+        # the shard's chain end (its last leaf) threads into the successor
+        if di.leaf_rows:
+            rows[di.last_leaf_row] = first_with_leaves[s]
+        else:
+            rows[:] = first_with_leaves[s]  # padding rows skip ahead
+        chain[s * Lmax : s * Lmax + L] = rows
+    return chain
+
+
+def stack_device_indexes(dis: list[DeviceIndex],
+                         bounds: np.ndarray) -> StackedDeviceIndex:
+    """Pad all shard mirrors to uniform pool capacities and stack them into
+    ``(S, …)``-leading arrays (DESIGN.md §9).  Padding reuses the pools' own
+    sentinel values (+inf keys, -1 links, NULL tags) so a vmapped per-shard
+    traversal behaves exactly as it would over the unpadded mirror.
+
+    Pool-count capacities (leading dims) round up to the power of two above
+    a 25% headroom: the slack absorbs shard growth (``restack_shard`` stays
+    in place across compactions) and keeps the stacked shapes — and
+    therefore the jitted read path's compiles — stable across full
+    re-stacks.  Fixed per-entry capacities (e.g. ``leaf_capacity``) round to
+    a plain power of two."""
+    assert dis, "need at least one shard mirror"
+    assert len(bounds) == len(dis) - 1, (len(bounds), len(dis))
+
+    def dim_cap(f: str, d: int) -> int:
+        m = max(getattr(di, f).shape[d] for di in dis)
+        return next_pow2(m + m // 4 + 1 if d == 0 else m)
+
+    shapes = {f: tuple(dim_cap(f, d)
+                       for d in range(getattr(dis[0], f).ndim))
+              for f, _ in _STACK_2D + _STACK_3D}
+    stacked = {f: np.stack([_pad_to(getattr(di, f), shapes[f], fill)
+                            for di in dis])
+               for f, fill in _STACK_2D + _STACK_3D}
+    Lmax = shapes["leaf_keys"][0]
+    return StackedDeviceIndex(
+        bounds=np.asarray(bounds, dtype=np.uint64), dis=list(dis), **stacked,
+        meta=np.array([[di.root_node, di.last_leaf_row] for di in dis],
+                      dtype=np.int32),
+        last_leaf_min=np.array([di.last_leaf_min for di in dis],
+                               dtype=np.uint64),
+        leaf_next_chain=_chain_rows(dis, Lmax),
+    )
+
+
+def rechain_stacked(sdi: StackedDeviceIndex) -> None:
+    """Recompute the cross-shard successor chain over all shards — O(S·Lmax),
+    so callers re-padding several shards in one step pass ``rechain=False``
+    to :func:`restack_shard` and call this once afterwards."""
+    sdi.leaf_next_chain[:] = _chain_rows(sdi.dis, sdi.leaf_keys.shape[1])
+
+
+def restack_shard(sdi: StackedDeviceIndex, s: int,
+                  rechain: bool = True) -> bool:
+    """Re-pad shard ``s``'s (refreshed) mirror into the stacked pools in
+    place.  Returns False when any pool outgrew its padded capacity — the
+    caller must then re-stack all shards (``stack_device_indexes``); cold
+    shards' slices (and their mirrors' snapshot epochs) are untouched either
+    way, which is what keeps compaction stalls shard-local."""
+    di = sdi.dis[s]
+    for f, _ in _STACK_2D + _STACK_3D:
+        if any(a > b for a, b in zip(getattr(di, f).shape,
+                                     getattr(sdi, f).shape[1:])):
+            return False
+    for f, fill in _STACK_2D + _STACK_3D:
+        dst = getattr(sdi, f)
+        dst[s] = _pad_to(getattr(di, f), dst.shape[1:], fill)
+    sdi.meta[s] = (di.root_node, di.last_leaf_row)
+    sdi.last_leaf_min[s] = di.last_leaf_min
+    if rechain:
+        rechain_stacked(sdi)
+    return True
 
 
 def refresh_device_index(idx: Aulid, di: DeviceIndex) -> DeviceIndex:

@@ -24,16 +24,16 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 
 from .delta_overlay import DeltaOverlay  # noqa: E402
-from .device_index import DeviceIndex  # noqa: E402
+from .device_index import _STACK_2D, _STACK_3D, DeviceIndex  # noqa: E402
+
+# the mirror pools every read path gathers from — one list, derived from the
+# stacking tables so a new DeviceIndex pool can't silently miss a consumer
+_DEVICE_FIELDS = [f for f, _ in _STACK_2D + _STACK_3D]
 
 
 def device_arrays(di: DeviceIndex) -> dict[str, jnp.ndarray]:
     """Move the mirror pools to device (jnp) arrays."""
-    fields = ["slot_tag", "slot_key", "slot_ptr", "next_occ", "succ_slot",
-              "node_base", "node_fanout", "node_slope", "node_intercept",
-              "node_overflow_slot", "pa_keys", "pa_ptrs", "bt_keys",
-              "bt_ptrs", "leaf_keys", "leaf_pay", "leaf_count", "leaf_next"]
-    d = {f: jnp.asarray(getattr(di, f)) for f in fields}
+    d = {f: jnp.asarray(getattr(di, f)) for f in _DEVICE_FIELDS}
     d["meta"] = jnp.array([di.root_node, di.last_leaf_row], dtype=jnp.int32)
     d["last_leaf_min"] = jnp.asarray(di.last_leaf_min)
     return d
@@ -133,6 +133,36 @@ def lookup_batch(arrs: dict, q: jnp.ndarray, height: int = 3):
     return jnp.where(found, pay, 0), found, leaf
 
 
+def _scan_leaf_walk(leaf_keys, leaf_pay, leaf_count, leaf_next,
+                    leaf0, q, count: int, max_blocks: int):
+    """Shared leaf-chain walk of the batched scans: gather ``max_blocks``
+    blocks along ``leaf_next`` from ``leaf0`` and compact the in-range
+    entries.  ``leaf_next`` may be the monolithic sibling links or the
+    stacked mirror's cross-shard successor chain (same walk either way)."""
+    cap = leaf_keys.shape[1]
+    Q = q.shape[0]
+    out_k = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
+    out_p = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
+    out_v = jnp.zeros((Q, max_blocks * cap), dtype=bool)
+    leaf = leaf0
+    for b in range(max_blocks):
+        ks = jnp.take(leaf_keys, leaf, axis=0, mode="clip")
+        ps = jnp.take(leaf_pay, leaf, axis=0, mode="clip")
+        cnt = jnp.take(leaf_count, leaf, mode="clip")
+        valid = (jnp.arange(cap)[None, :] < cnt[:, None]) & (ks >= q[:, None]) \
+            & (leaf >= 0)[:, None]
+        out_k = out_k.at[:, b * cap : (b + 1) * cap].set(ks)
+        out_p = out_p.at[:, b * cap : (b + 1) * cap].set(ps)
+        out_v = out_v.at[:, b * cap : (b + 1) * cap].set(valid)
+        leaf = jnp.where(leaf >= 0, jnp.take(leaf_next, leaf, mode="clip"), -1)
+    # compact: order valid entries first (keys within+across blocks are sorted)
+    order = jnp.argsort(~out_v, axis=1, stable=True)[:, :count]
+    keys = jnp.take_along_axis(out_k, order, axis=1)
+    pays = jnp.take_along_axis(out_p, order, axis=1)
+    vmask = jnp.take_along_axis(out_v, order, axis=1)
+    return keys, pays, vmask
+
+
 @functools.partial(jax.jit, static_argnames=("height", "count", "max_blocks"))
 def scan_batch(arrs: dict, q: jnp.ndarray, count: int = 100, height: int = 3,
                max_blocks: int | None = None):
@@ -146,27 +176,9 @@ def scan_batch(arrs: dict, q: jnp.ndarray, count: int = 100, height: int = 3,
     cap = arrs["leaf_keys"].shape[1]
     if max_blocks is None:
         max_blocks = count // max(cap // 2, 1) + 2
-    Q = q.shape[0]
-    out_k = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
-    out_p = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
-    out_v = jnp.zeros((Q, max_blocks * cap), dtype=bool)
-    leaf = leaf0
-    for b in range(max_blocks):
-        ks = jnp.take(arrs["leaf_keys"], leaf, axis=0, mode="clip")
-        ps = jnp.take(arrs["leaf_pay"], leaf, axis=0, mode="clip")
-        cnt = jnp.take(arrs["leaf_count"], leaf, mode="clip")
-        valid = (jnp.arange(cap)[None, :] < cnt[:, None]) & (ks >= q[:, None]) \
-            & (leaf >= 0)[:, None]
-        out_k = out_k.at[:, b * cap : (b + 1) * cap].set(ks)
-        out_p = out_p.at[:, b * cap : (b + 1) * cap].set(ps)
-        out_v = out_v.at[:, b * cap : (b + 1) * cap].set(valid)
-        leaf = jnp.where(leaf >= 0, jnp.take(arrs["leaf_next"], leaf, mode="clip"), -1)
-    # compact: order valid entries first (keys within+across blocks are sorted)
-    order = jnp.argsort(~out_v, axis=1, stable=True)[:, :count]
-    keys = jnp.take_along_axis(out_k, order, axis=1)
-    pays = jnp.take_along_axis(out_p, order, axis=1)
-    vmask = jnp.take_along_axis(out_v, order, axis=1)
-    return keys, pays, vmask
+    return _scan_leaf_walk(arrs["leaf_keys"], arrs["leaf_pay"],
+                           arrs["leaf_count"], arrs["leaf_next"],
+                           leaf0, q, count, max_blocks)
 
 
 # --------------------------------------------------------------------- overlay
@@ -248,29 +260,48 @@ def lookup_batch_overlay(arrs: dict, ovr: dict, q: jnp.ndarray, height: int = 3)
     return jnp.where(found, pay, 0), found, leaf
 
 
-@functools.partial(jax.jit, static_argnames=("height", "count", "max_blocks"))
+@functools.partial(jax.jit,
+                   static_argnames=("height", "count", "max_blocks",
+                                    "ov_bound"))
 def scan_batch_overlay(arrs: dict, ovr: dict, q: jnp.ndarray, count: int = 100,
-                       height: int = 3, max_blocks: int | None = None):
+                       height: int = 3, max_blocks: int | None = None,
+                       ov_bound: int | None = None):
     """Batched range scan over snapshot + overlay (two-way sorted merge).
 
-    Fetches ``count + overlay_capacity`` snapshot candidates (the overlay can
-    hide at most ``capacity`` of them via tombstones/upserts), drops snapshot
-    keys the overlay overrides, unions in the overlay's live in-range entries,
-    and re-sorts — the device twin of the host's leaf-chain + overlay merge.
+    Fetches ``count + ov_bound`` snapshot candidates (the overlay can hide at
+    most one snapshot key per entry it holds via tombstones/upserts), drops
+    snapshot keys the overlay overrides, unions in the overlay's live
+    in-range entries, and re-sorts — the device twin of the host's leaf-chain
+    + overlay merge.
+
+    ``ov_bound`` (static) must be >= the number of LIVE overlay entries;
+    callers that track occupancy host-side (the serving engines) pass its
+    next power of two, which keeps the unrolled leaf walk proportional to the
+    overlay's actual fill. The default is the padded capacity — always safe,
+    but an overlay sized for a large compaction threshold then unrolls a
+    pathologically deep walk, so pass the bound whenever you know it.
     Returns (keys (Q,count), payloads, valid mask)."""
     q = q.astype(jnp.uint64)
     keys, pays, tombs = _overlay_unpack(ovr)
     cap = keys.shape[0]
-    base = count + cap
+    hide = cap if ov_bound is None else min(int(ov_bound), cap)
+    base = count + hide
     if max_blocks is not None:
         # the caller sized max_blocks for `count`; widen it for the extra
-        # `cap` snapshot candidates this merge needs or tombstones could
+        # `hide` snapshot candidates this merge needs or tombstones could
         # silently starve the window
         leaf_cap = arrs["leaf_keys"].shape[1]
-        max_blocks = max_blocks + cap // max(leaf_cap // 2, 1) + 1
+        max_blocks = max_blocks + hide // max(leaf_cap // 2, 1) + 1
     ks, ps, vs = scan_batch(arrs, q, count=base, height=height,
                             max_blocks=max_blocks)
-    # snapshot entries whose key the overlay owns (upsert or tombstone) lose
+    return _overlay_scan_merge(ks, ps, vs, keys, pays, tombs, q, count)
+
+
+def _overlay_scan_merge(ks, ps, vs, keys, pays, tombs, q, count: int):
+    """Merge snapshot scan candidates with the overlay range (shared by the
+    monolithic and sharded scans): snapshot keys the overlay owns lose, live
+    overlay entries in range union in, and the result re-sorts."""
+    cap = keys.shape[0]
     pos = jnp.searchsorted(keys, ks, side="left").astype(jnp.int32)
     owned = (pos < cap) & (jnp.take(keys, jnp.clip(pos, 0, cap - 1)) == ks)
     vs = vs & ~owned
@@ -288,3 +319,157 @@ def scan_batch_overlay(arrs: dict, ovr: dict, q: jnp.ndarray, count: int = 100,
     return (jnp.take_along_axis(comb_k, order, axis=1),
             jnp.take_along_axis(comb_p, order, axis=1),
             jnp.take_along_axis(comb_v, order, axis=1))
+
+
+# --------------------------------------------------------------------- sharded
+# Range-sharded read path (DESIGN.md §9): the stacked mirror pools of
+# ``device_index.stack_device_indexes`` carry a leading shard axis, and the
+# batched entry points below route each query with ONE searchsorted over the
+# boundary table, scatter queries into per-shard lanes, ``jax.vmap`` the
+# monolithic unrolled traversal over the shard axis, and gather results back
+# into request order.  Scans then leave the vmap: they walk the flattened
+# (S*L,) leaf pools through the precomputed shard-successor chain, so a range
+# crossing a shard boundary keeps streaming blocks with no host round-trip.
+
+def stacked_device_arrays(sdi) -> dict[str, jnp.ndarray]:
+    """Move a :class:`StackedDeviceIndex`'s pools to device arrays."""
+    d = {f: jnp.asarray(getattr(sdi, f)) for f in _DEVICE_FIELDS}
+    d["meta"] = jnp.asarray(sdi.meta)
+    d["last_leaf_min"] = jnp.asarray(sdi.last_leaf_min)
+    d["bounds"] = jnp.asarray(sdi.bounds)
+    d["leaf_next_chain"] = jnp.asarray(sdi.leaf_next_chain)
+    return d
+
+
+def update_stacked_shard(stk: dict, sdi, shards: list[int]) -> dict:
+    """Patch the device copy of the stacked pools after ``restack_shard``
+    refreshed the given shards: only those shards' slices are re-uploaded
+    (plus the small per-shard metadata vectors and the successor chain) —
+    cold shards' device slices are untouched, keeping the device cost of a
+    shard-local compaction proportional to the hot shard."""
+    stk = dict(stk)
+    # one batched scatter per field: each eager .at[].set materializes a new
+    # array the size of the WHOLE stacked pool, so per-shard updates would
+    # cost O(pool x len(shards)) instead of O(pool)
+    idx = jnp.asarray(np.asarray(shards, dtype=np.int32))
+    sel = np.asarray(shards, dtype=np.intp)
+    for f in _DEVICE_FIELDS:
+        stk[f] = stk[f].at[idx].set(jnp.asarray(getattr(sdi, f)[sel]))
+    stk["meta"] = jnp.asarray(sdi.meta)
+    stk["last_leaf_min"] = jnp.asarray(sdi.last_leaf_min)
+    stk["leaf_next_chain"] = jnp.asarray(sdi.leaf_next_chain)
+    return stk
+
+
+@functools.partial(jax.jit, static_argnames=("height", "qcap"))
+def lookup_batch_sharded(stk: dict, q: jnp.ndarray, height: int = 3,
+                         qcap: int | None = None):
+    """Batched point lookup over stacked shard mirrors.
+
+    Route (one searchsorted over the boundary table) -> scatter-by-shard into
+    an (S, qcap) lane matrix -> ``jax.vmap`` of :func:`lookup_batch` over the
+    shard axis -> gather-back permutation into request order.
+
+    ``qcap`` (static) is the per-shard lane capacity; it must be >= the
+    largest per-shard query count or lanes would clobber (callers that know
+    the routing host-side — the serving engine — pass the next power of two
+    of the max shard load; the default Q is always safe).
+    Returns (payload u64, found bool, global leaf row i32, shard id i32);
+    the leaf row indexes the flattened (S*L,) leaf pools.
+    """
+    q = q.astype(jnp.uint64)
+    Q = q.shape[0]
+    S = stk["meta"].shape[0]
+    L = stk["leaf_keys"].shape[1]
+    qcap = Q if qcap is None else min(int(qcap), Q)
+    sid = jnp.searchsorted(stk["bounds"], q, side="left").astype(jnp.int32)
+    order = jnp.argsort(sid, stable=True)
+    sid_s = jnp.take(sid, order)
+    q_s = jnp.take(q, order)
+    counts = jnp.bincount(sid_s, length=S)
+    offs = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                            jnp.cumsum(counts)[:-1]])
+    lane = jnp.arange(Q) - jnp.take(offs, sid_s)   # position within shard
+    flat = sid_s * qcap + lane
+    pad = jnp.uint64(0xFFFFFFFFFFFFFFFF)           # never matches a real key
+    q_mat = jnp.full((S * qcap,), pad, dtype=jnp.uint64) \
+        .at[flat].set(q_s).reshape(S, qcap)
+    per_shard = {f: stk[f] for f in _DEVICE_FIELDS + ["meta", "last_leaf_min"]}
+    pay_m, found_m, leaf_m = jax.vmap(
+        lambda a, qq: lookup_batch(a, qq, height=height))(per_shard, q_mat)
+
+    def gather_back(m):
+        v = m.reshape(S * qcap)[flat]
+        return jnp.zeros((Q,), v.dtype).at[order].set(v)
+
+    pay = gather_back(pay_m)
+    found = gather_back(found_m)
+    leaf = gather_back(leaf_m)
+    return pay, found, sid * L + leaf, sid
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("height", "count", "max_blocks", "qcap"))
+def scan_batch_sharded(stk: dict, q: jnp.ndarray, count: int = 100,
+                       height: int = 3, max_blocks: int | None = None,
+                       qcap: int | None = None):
+    """Batched range scan over stacked shard mirrors.
+
+    The start leaf comes from the vmapped sharded lookup; the walk itself
+    runs on the flattened (S*L, cap) leaf pools through the precomputed
+    shard-successor chain, so a scan that exhausts its shard continues in
+    the next shard's first leaf with no extra dispatch (cross-shard scans,
+    DESIGN.md §9).  Returns (keys (Q,count), payloads, valid mask)."""
+    q = q.astype(jnp.uint64)
+    S = stk["meta"].shape[0]
+    cap = stk["leaf_keys"].shape[2]
+    if max_blocks is None:
+        # + S: each shard boundary crossed can add one underfull chain leaf
+        max_blocks = count // max(cap // 2, 1) + 2 + S
+    _, _, gleaf, _ = lookup_batch_sharded(stk, q, height=height, qcap=qcap)
+    return _scan_leaf_walk(stk["leaf_keys"].reshape(-1, cap),
+                           stk["leaf_pay"].reshape(-1, cap),
+                           stk["leaf_count"].reshape(-1),
+                           stk["leaf_next_chain"],
+                           gleaf, q, count, max_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("height", "qcap"))
+def lookup_batch_sharded_overlay(stk: dict, ovr: dict, q: jnp.ndarray,
+                                 height: int = 3, qcap: int | None = None):
+    """Sharded point lookup merged with the (globally sorted) overlay pack.
+
+    Per-shard overlays concatenate into one globally sorted pack (shards
+    partition the key space in order), so overlay consultation stays the
+    monolithic single probe.  Returns (payload, found, global leaf row)."""
+    q = q.astype(jnp.uint64)
+    pay, found, gleaf, _ = lookup_batch_sharded(stk, q, height=height,
+                                                qcap=qcap)
+    hit, tomb, opay = _overlay_probe(ovr, q)
+    pay = jnp.where(hit & ~tomb, opay, pay)
+    found = jnp.where(hit, ~tomb, found)
+    return jnp.where(found, pay, 0), found, gleaf
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("height", "count", "max_blocks", "qcap",
+                                    "ov_bound"))
+def scan_batch_sharded_overlay(stk: dict, ovr: dict, q: jnp.ndarray,
+                               count: int = 100, height: int = 3,
+                               max_blocks: int | None = None,
+                               qcap: int | None = None,
+                               ov_bound: int | None = None):
+    """Sharded range scan merged with the global overlay pack (the same
+    two-way sorted merge as :func:`scan_batch_overlay`, over the cross-shard
+    leaf chain; ``ov_bound`` bounds live overlay entries exactly as there)."""
+    q = q.astype(jnp.uint64)
+    keys, pays, tombs = _overlay_unpack(ovr)
+    cap = keys.shape[0]
+    hide = cap if ov_bound is None else min(int(ov_bound), cap)
+    base = count + hide
+    if max_blocks is not None:
+        leaf_cap = stk["leaf_keys"].shape[2]
+        max_blocks = max_blocks + hide // max(leaf_cap // 2, 1) + 1
+    ks, ps, vs = scan_batch_sharded(stk, q, count=base, height=height,
+                                    max_blocks=max_blocks, qcap=qcap)
+    return _overlay_scan_merge(ks, ps, vs, keys, pays, tombs, q, count)

@@ -1,0 +1,133 @@
+"""Range partitioning of the key space over per-shard AULID indexes.
+
+Production learned-index deployments scale by partitioning (Bigtable keeps
+one small model per tablet); for us the partition is the structural move that
+makes compaction stalls shard-local (DESIGN.md §9): each shard owns a host
+``Aulid`` (with its own change journal and block device), so a hot shard
+folding its overlay never rebuilds a cold shard's mirror.
+
+The shard boundary table is built once, from bulkload key quantiles:
+``bounds[s]`` is the *inclusive* upper key of shard ``s`` (the last shard is
+unbounded above), and routing any key — read or write — is a single
+``searchsorted`` over the (S-1)-entry table.  Bounds are frozen after
+bulkload: inserts beyond a shard's original key range still route to the same
+shard, so host, overlay, and stacked-mirror views agree request-for-request
+with a monolithic index (property-tested in ``tests/test_sharded_engine.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .aulid import Aulid, AulidConfig
+from .blockdev import BlockDevice
+
+
+@dataclasses.dataclass
+class RangePartition:
+    """Boundary table + per-shard host indexes (each with its own journal)."""
+
+    bounds: np.ndarray          # (S-1,) u64 inclusive upper key per shard
+    shards: list[Aulid]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_items(self) -> int:
+        return sum(sh.n_items for sh in self.shards)
+
+    # -------------------------------------------------------------- routing
+    def shard_of(self, key: int) -> int:
+        """One searchsorted over the boundary table (DESIGN.md §9)."""
+        return int(np.searchsorted(self.bounds, np.uint64(int(key)),
+                                   side="left"))
+
+    def shard_of_batch(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.uint64)
+        return np.searchsorted(self.bounds, keys, side="left").astype(np.int32)
+
+    # ------------------------------------------------------------ operations
+    def insert(self, key: int, payload: int) -> None:
+        self.shards[self.shard_of(key)].insert(key, payload)
+
+    def update(self, key: int, payload: int) -> bool:
+        return self.shards[self.shard_of(key)].update(key, payload)
+
+    def delete(self, key: int) -> bool:
+        return self.shards[self.shard_of(key)].delete(key)
+
+    def lookup(self, key: int) -> Optional[int]:
+        return self.shards[self.shard_of(key)].lookup(key)
+
+    def scan(self, start_key: int, count: int) -> list[tuple[int, int]]:
+        """Host-side cross-shard scan: drain the owning shard, then continue
+        through successor shards (the host twin of the device mirror's
+        shard-successor leaf chain)."""
+        out: list[tuple[int, int]] = []
+        for s in range(self.shard_of(start_key), self.num_shards):
+            if len(out) >= count:
+                break
+            out.extend(self.shards[s].scan(
+                start_key if not out else 0, count - len(out)))
+        return out[:count]
+
+    def check_invariants(self) -> None:
+        prev_hi = -1
+        for s, sh in enumerate(self.shards):
+            sh.check_invariants()
+            lo = sh.first_leaf
+            if sh.n_items == 0:
+                continue
+            ks = sh.leaf_keys[lo][: sh.leaf_count[lo]]
+            if len(ks):
+                assert int(ks[0]) > prev_hi or prev_hi < 0, \
+                    f"shard {s} overlaps predecessor"
+            prev_hi = int(self.bounds[s]) if s < len(self.bounds) else prev_hi
+
+
+def partition_bulkload(keys: np.ndarray, payloads: np.ndarray,
+                       num_shards: int,
+                       cfg: Optional[AulidConfig] = None,
+                       dev_factory: Optional[Callable[[], BlockDevice]] = None,
+                       ) -> RangePartition:
+    """Bulkload sorted ``keys`` into ``num_shards`` range shards.
+
+    Boundaries are key quantiles: shard ``s`` takes the s-th of S equal-count
+    contiguous chunks, and ``bounds[s]`` is its last (largest) key.  Duplicate
+    quantile keys collapse (a key is never split across shards), so the
+    effective shard count can shrink on heavily duplicated inputs.
+    """
+    keys = np.asarray(keys, dtype=np.uint64)
+    payloads = np.asarray(payloads, dtype=np.uint64)
+    assert keys.ndim == 1 and keys.shape == payloads.shape
+    assert np.all(keys[1:] >= keys[:-1]), "partition bulkload requires sorted keys"
+    n = len(keys)
+    num_shards = max(1, int(num_shards))
+
+    def mk() -> Aulid:
+        dev = dev_factory() if dev_factory is not None else BlockDevice(
+            block_bytes=(cfg.block_bytes if cfg is not None else 4096))
+        return Aulid(dev, cfg=cfg)
+
+    if n == 0 or num_shards == 1:
+        sh = mk()
+        sh.bulkload(keys, payloads)
+        return RangePartition(np.empty(0, dtype=np.uint64), [sh])
+
+    # quantile split points; side="right" keeps equal keys in one shard
+    cuts = [int(np.searchsorted(
+        keys, keys[max((s + 1) * n // num_shards - 1, 0)], side="right"))
+        for s in range(num_shards - 1)]
+    cuts = sorted(set(c for c in cuts if 0 < c < n))
+    bounds = np.array([keys[c - 1] for c in cuts], dtype=np.uint64)
+    edges = [0] + cuts + [n]
+    shards = []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        sh = mk()
+        sh.bulkload(keys[lo:hi], payloads[lo:hi])
+        shards.append(sh)
+    return RangePartition(bounds, shards)

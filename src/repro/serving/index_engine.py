@@ -18,12 +18,19 @@ Request flow per :meth:`step`:
    cleared — mirroring AULID's own Adjust criterion of amortizing structural
    work against a fraction of covered data (paper §4.4);
 4. execute all point reads as ONE fused ``lookup_batch_overlay`` device batch
-   and scans as one ``scan_batch_overlay`` batch per scan length.
+   and scans as one ``scan_batch_overlay`` batch per power-of-two scan-length
+   bucket (mixed scan lengths share compiles; results slice to the requested
+   count).
 
 Write semantics are unique-key upserts (``insert`` overwrites an existing
 key's payload; ``delete`` removes the key) so host, overlay, and device views
 agree under arbitrary interleavings — AULID's duplicate-key multiset remains
 available on the host path directly.
+
+The per-index state (host index, mirror, overlay, compaction counters) lives
+in :class:`IndexShard` so the range-sharded engine (``sharded_engine.py``,
+DESIGN.md §9) reuses the same write/compaction lifecycle per shard while this
+engine stays the S=1 special case.
 """
 from __future__ import annotations
 
@@ -34,8 +41,27 @@ from typing import Optional
 import numpy as np
 
 from ..core.aulid import Aulid
-from ..core.delta_overlay import DeltaOverlay
-from ..core.device_index import build_device_index, refresh_device_index
+from ..core.delta_overlay import DeltaOverlay, next_pow2
+from ..core.device_index import (DeviceIndex, build_device_index,
+                                 refresh_device_index)
+
+MIN_SCAN_BUCKET = 8
+
+
+def scan_bucket(count: int) -> int:
+    """Power-of-two scan-length bucket: mixed scan workloads compile once per
+    distinct bucket instead of once per distinct length; results are computed
+    at the bucket size and sliced back to the requested count."""
+    return max(MIN_SCAN_BUCKET, next_pow2(int(count)))
+
+
+def pad_queries(keys: list[int]) -> np.ndarray:
+    """Pad a read batch to the next power of two with u64-max sentinel keys
+    (never found; results past the real count are discarded) so the jitted
+    read path compiles once per size bucket, not once per batch size."""
+    q = np.full(next_pow2(len(keys)), 0xFFFFFFFFFFFFFFFF, dtype=np.uint64)
+    q[: len(keys)] = keys
+    return q
 
 
 @dataclasses.dataclass
@@ -49,38 +75,94 @@ class IndexRequest:
     done: bool = False
 
 
-class IndexEngine:
-    """Batching engine for mixed get/insert/delete/scan over one index."""
+@dataclasses.dataclass
+class IndexShard:
+    """Per-index serving state: host structure, frozen device mirror, write
+    overlay, and compaction counters (DESIGN.md §3 lifecycle, §9 sharding).
 
-    def __init__(self, idx: Aulid, *, gamma: float = 0.05,
-                 auto_compact: bool = True):
-        # imported lazily-adjacent (module import enables jax x64 — keep the
-        # engine importable before the host index is even built)
-        from ..core.lookup import (device_arrays, lookup_batch_overlay,
-                                   overlay_arrays, scan_batch_overlay,
-                                   update_leaf_rows)
-        self._device_arrays = device_arrays
-        self._update_leaf_rows = update_leaf_rows
-        self._overlay_arrays = overlay_arrays
-        self._lookup = lookup_batch_overlay
-        self._scan = scan_batch_overlay
-        self.idx = idx
-        self.gamma = gamma
-        self.auto_compact = auto_compact
+    ``arrs``/``ov_arrs`` are the device copies the monolithic engine serves
+    from; the sharded engine leaves them ``None`` and serves from the stacked
+    pools instead (``with_arrays=False``), so a shard compaction only touches
+    its own slice of the stack."""
+    idx: Aulid
+    overlay: DeltaOverlay
+    di: DeviceIndex
+    arrs: Optional[dict] = None
+    ov_arrs: Optional[dict] = None
+    compactions: int = 0
+
+    @classmethod
+    def wrap(cls, idx: Aulid, gamma: float,
+             with_arrays: bool = True) -> "IndexShard":
         # capacity floor ~= compaction threshold: one jit shape per lifetime
-        self.overlay = DeltaOverlay.for_threshold(gamma * max(idx.n_items, 1))
-        self.di = build_device_index(idx)
-        self.arrs = self._device_arrays(self.di)
-        self.ov_arrs = self._overlay_arrays(self.overlay)
+        overlay = DeltaOverlay.for_threshold(gamma * max(idx.n_items, 1))
+        di = build_device_index(idx)
+        sh = cls(idx=idx, overlay=overlay, di=di)
+        if with_arrays:
+            from ..core.lookup import device_arrays, overlay_arrays
+            sh.arrs = device_arrays(di)
+            sh.ov_arrs = overlay_arrays(overlay)
+        return sh
+
+    # ---------------------------------------------------------------- writes
+    def apply_write(self, op: str, key: int, payload: int = 0):
+        """Host + overlay write (unique-key upsert semantics, module
+        docstring).  Returns the request result (True / delete outcome)."""
+        if op == "insert":
+            if not self.idx.update(key, payload):
+                self.idx.insert(key, payload)
+            self.overlay.record_insert(key, payload)
+            return True
+        self.overlay.record_delete(key)
+        return self.idx.delete(key)
+
+    # ------------------------------------------------------------ compaction
+    def needs_compaction(self, gamma: float) -> bool:
+        return len(self.overlay) >= gamma * max(self.idx.n_items, 1)
+
+    def compact(self) -> None:
+        """Fold the overlay into a fresh snapshot and clear it (DESIGN.md §3).
+
+        After a fast-path refresh only the touched leaf rows are re-uploaded
+        (``update_leaf_rows``); a full rebuild re-transfers every pool.  When
+        this shard serves from a stacked mirror (``arrs is None``) the device
+        update is the owner engine's job (``restack_shard``)."""
+        old = self.di
+        self.di = refresh_device_index(self.idx, old)
+        if self.arrs is not None:
+            from ..core.lookup import device_arrays, update_leaf_rows
+            if self.di is old:
+                self.arrs = update_leaf_rows(self.arrs, self.di)
+            else:
+                self.arrs = device_arrays(self.di)
+        self.overlay.clear()
+        if self.ov_arrs is not None:
+            self.refresh_overlay_arrays()
+        self.compactions += 1
+
+    def refresh_overlay_arrays(self) -> None:
+        from ..core.lookup import overlay_arrays
+        self.ov_arrs = overlay_arrays(self.overlay)
+
+
+class BaseIndexEngine:
+    """Request admission, fused-batch read serving, and step timing shared by
+    the monolithic and range-sharded engines (DESIGN.md §4, §9).
+
+    Subclasses bind the jitted read entry points (``self._lookup`` /
+    ``self._scan``, called with the device operands `_snap()` / `_ov()`) and
+    implement the write/compaction path (`_apply_write`, `_after_writes`)."""
+
+    def __init__(self):
         self.queue: list[IndexRequest] = []
         self.next_rid = 0
         # serving stats
         self.steps = 0
         self.reads_served = 0
         self.writes_applied = 0
-        self.compactions = 0
         self.read_batch_sizes: list[int] = []
         self.serve_seconds = 0.0
+        self.step_seconds: list[float] = []   # per-step latency (p99 source)
 
     # ------------------------------------------------------------- admission
     def submit(self, op: str, key: int, payload: int = 0,
@@ -104,50 +186,34 @@ class IndexEngine:
     def scan(self, key: int, count: int = 100) -> IndexRequest:
         return self.submit("scan", key, count=count)
 
-    # ------------------------------------------------------------ write path
+    # ---------------------------------------------------- subclass bindings
+    def _snap(self) -> dict:
+        """Device snapshot operand of the read entry points."""
+        raise NotImplementedError
+
+    def _ov(self) -> dict:
+        """Device overlay operand of the read entry points."""
+        raise NotImplementedError
+
+    def _height(self) -> int:
+        raise NotImplementedError
+
+    def _overlay_live(self) -> int:
+        """Live overlay entries — the scan's hideable-candidate bound."""
+        raise NotImplementedError
+
     def _apply_write(self, req: IndexRequest) -> None:
-        if req.op == "insert":           # unique-key upsert (module docstring)
-            if not self.idx.update(req.key, req.payload):
-                self.idx.insert(req.key, req.payload)
-            self.overlay.record_insert(req.key, req.payload)
-            req.result = True
-        else:
-            req.result = self.idx.delete(req.key)
-            self.overlay.record_delete(req.key)
-        req.done = True
-        self.writes_applied += 1
+        raise NotImplementedError
 
-    def compact(self) -> None:
-        """Fold the overlay into a fresh snapshot and clear it (DESIGN.md §3).
-
-        After a fast-path refresh only the touched leaf rows are re-uploaded
-        (``update_leaf_rows``); a full rebuild re-transfers every pool."""
-        old = self.di
-        self.di = refresh_device_index(self.idx, old)
-        if self.di is old:
-            self.arrs = self._update_leaf_rows(self.arrs, self.di)
-        else:
-            self.arrs = self._device_arrays(self.di)
-        self.overlay.clear()
-        self._refresh_overlay_arrays()
-        self.compactions += 1
-
-    def _maybe_compact(self) -> None:
-        if self.auto_compact and \
-                len(self.overlay) >= self.gamma * max(self.idx.n_items, 1):
-            self.compact()
+    def _after_writes(self) -> None:
+        """Compaction policy + overlay device-pack refresh."""
+        raise NotImplementedError
 
     # ------------------------------------------------------------- read path
-    def _height(self) -> int:
-        return max(self.di.max_inner_height, 3)
-
-    def _refresh_overlay_arrays(self) -> None:
-        self.ov_arrs = self._overlay_arrays(self.overlay)
-
     def _serve_gets(self, gets: list[IndexRequest]) -> None:
         import jax.numpy as jnp
-        q = jnp.asarray(np.array([r.key for r in gets], dtype=np.uint64))
-        pay, found, _ = self._lookup(self.arrs, self.ov_arrs, q,
+        q = jnp.asarray(pad_queries([r.key for r in gets]))
+        pay, found, _ = self._lookup(self._snap(), self._ov(), q,
                                      height=self._height())
         pay = np.asarray(pay)
         found = np.asarray(found)
@@ -159,16 +225,20 @@ class IndexEngine:
 
     def _serve_scans(self, scans: list[IndexRequest]) -> None:
         import jax.numpy as jnp
-        by_count: dict[int, list[IndexRequest]] = {}
+        by_bucket: dict[int, list[IndexRequest]] = {}
         for r in scans:
-            by_count.setdefault(r.count or 100, []).append(r)
-        for count, grp in sorted(by_count.items()):
-            q = jnp.asarray(np.array([r.key for r in grp], dtype=np.uint64))
-            ks, ps, valid = self._scan(self.arrs, self.ov_arrs, q,
-                                       count=count, height=self._height())
+            by_bucket.setdefault(scan_bucket(r.count or 100), []).append(r)
+        # live-overlay bound (pow2-bucketed): the scan's unrolled leaf walk
+        # scales with how full the overlay IS, not its padded capacity
+        ov_bound = next_pow2(max(self._overlay_live(), MIN_SCAN_BUCKET))
+        for bucket, grp in sorted(by_bucket.items()):
+            q = jnp.asarray(pad_queries([r.key for r in grp]))
+            ks, ps, valid = self._scan(self._snap(), self._ov(), q,
+                                       count=bucket, height=self._height(),
+                                       ov_bound=ov_bound)
             ks, ps, valid = map(np.asarray, (ks, ps, valid))
             for i, r in enumerate(grp):
-                n = int(valid[i].sum())
+                n = min(int(valid[i].sum()), r.count or 100)
                 r.result = list(zip(ks[i][:n].tolist(), ps[i][:n].tolist()))
                 r.done = True
             self.reads_served += len(grp)
@@ -176,7 +246,7 @@ class IndexEngine:
 
     # ------------------------------------------------------------------ step
     def step(self) -> int:
-        """Drain the queue: writes (host + overlay), compaction check, then
+        """Drain the queue: writes (host + overlay), compaction policy, then
         all reads as fused device batches. Returns requests completed."""
         if not self.queue:
             return 0
@@ -188,14 +258,15 @@ class IndexEngine:
         for r in writes:
             self._apply_write(r)
         if writes:
-            self._maybe_compact()
-            self._refresh_overlay_arrays()
+            self._after_writes()
         if gets:
             self._serve_gets(gets)
         if scans:
             self._serve_scans(scans)
         self.steps += 1
-        self.serve_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.serve_seconds += dt
+        self.step_seconds.append(dt)
         return len(batch)
 
     def run(self) -> int:
@@ -211,12 +282,95 @@ class IndexEngine:
             "steps": self.steps,
             "reads_served": self.reads_served,
             "writes_applied": self.writes_applied,
-            "overlay_len": len(self.overlay),
-            "compactions": self.compactions,
-            "mirror_refreshes": self.di.refreshes,
-            "mirror_full_builds": self.di.full_builds,
             "mean_read_batch": (float(np.mean(self.read_batch_sizes))
                                 if self.read_batch_sizes else 0.0),
             "throughput_ops_s": (ops / self.serve_seconds
                                  if self.serve_seconds else 0.0),
+            "p99_step_s": (float(np.percentile(self.step_seconds, 99))
+                           if self.step_seconds else 0.0),
+        }
+
+
+class IndexEngine(BaseIndexEngine):
+    """Batching engine for mixed get/insert/delete/scan over one index."""
+
+    def __init__(self, idx: Aulid, *, gamma: float = 0.05,
+                 auto_compact: bool = True):
+        # imported lazily-adjacent (module import enables jax x64 — keep the
+        # engine importable before the host index is even built)
+        from ..core.lookup import lookup_batch_overlay, scan_batch_overlay
+        super().__init__()
+        self._lookup = lookup_batch_overlay
+        self._scan = scan_batch_overlay
+        self.gamma = gamma
+        self.auto_compact = auto_compact
+        self.shard = IndexShard.wrap(idx, gamma)
+
+    # ------------------------------------------- shard-state delegation
+    @property
+    def idx(self) -> Aulid:
+        return self.shard.idx
+
+    @property
+    def overlay(self) -> DeltaOverlay:
+        return self.shard.overlay
+
+    @property
+    def di(self) -> DeviceIndex:
+        return self.shard.di
+
+    @property
+    def arrs(self) -> dict:
+        return self.shard.arrs
+
+    @property
+    def ov_arrs(self) -> dict:
+        return self.shard.ov_arrs
+
+    @property
+    def compactions(self) -> int:
+        return self.shard.compactions
+
+    # ------------------------------------------------------------ write path
+    def _apply_write(self, req: IndexRequest) -> None:
+        req.result = self.shard.apply_write(req.op, req.key, req.payload)
+        req.done = True
+        self.writes_applied += 1
+
+    def compact(self) -> None:
+        self.shard.compact()
+
+    def _maybe_compact(self) -> bool:
+        if self.auto_compact and self.shard.needs_compaction(self.gamma):
+            self.compact()
+            return True
+        return False
+
+    def _after_writes(self) -> None:
+        # compact() already rebuilds the overlay device pack (for the now-
+        # empty overlay); refresh it only when this step did not compact
+        if not self._maybe_compact():
+            self.shard.refresh_overlay_arrays()
+
+    # ------------------------------------------------------------- read path
+    def _snap(self) -> dict:
+        return self.shard.arrs
+
+    def _ov(self) -> dict:
+        return self.shard.ov_arrs
+
+    def _height(self) -> int:
+        return max(self.di.max_inner_height, 3)
+
+    def _overlay_live(self) -> int:
+        return len(self.overlay)
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            **super().stats(),
+            "overlay_len": len(self.overlay),
+            "compactions": self.compactions,
+            "mirror_refreshes": self.di.refreshes,
+            "mirror_full_builds": self.di.full_builds,
         }

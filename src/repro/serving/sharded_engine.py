@@ -1,0 +1,160 @@
+"""Shard-parallel serving engine over a range-partitioned AULID (DESIGN.md §9).
+
+The monolithic :class:`~repro.serving.index_engine.IndexEngine` serves every
+request through ONE host index and ONE device mirror, so every compaction
+stalls the whole key space behind an O(n) mirror rebuild.  This engine
+partitions the key space into range shards (``core/partition.py``) and keeps
+one :class:`IndexShard` per range:
+
+* **writes** route to their shard's host index + overlay with one
+  ``searchsorted`` over the boundary table;
+* **compaction** is *shard-local*: a hot shard folding its overlay refreshes
+  only its own mirror and re-uploads only its own slice of the stacked pools
+  (``restack_shard`` + ``update_stacked_shard``) — cold shards' mirrors keep
+  their snapshot epoch, which is what the skewed-workload p99 gate in
+  ``benchmarks/sharded_serving.py`` measures;
+* **reads** still execute as ONE fused device batch per step: the stacked
+  ``(S, …)`` mirror pools feed the vmapped ``lookup_batch_sharded`` and the
+  cross-shard ``scan_batch_sharded`` (shard-successor leaf chain), with all
+  shard overlays concatenated into one globally sorted pack (shards partition
+  the key space in order, so concatenation in shard order IS the sort).
+
+Request semantics are identical to the monolithic engine, request for request
+(property-tested in ``tests/test_sharded_engine.py``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.delta_overlay import UINT64_MAX, next_pow2
+from ..core.device_index import (rechain_stacked, restack_shard,
+                                 stack_device_indexes)
+from ..core.partition import RangePartition
+from .index_engine import BaseIndexEngine, IndexRequest, IndexShard
+
+
+class ShardedIndexEngine(BaseIndexEngine):
+    """Batching engine for mixed get/insert/delete/scan over range shards."""
+
+    def __init__(self, part: RangePartition, *, gamma: float = 0.05,
+                 auto_compact: bool = True):
+        from ..core.lookup import (lookup_batch_sharded_overlay,
+                                   scan_batch_sharded_overlay,
+                                   stacked_device_arrays,
+                                   update_stacked_shard)
+        super().__init__()
+        self._lookup = lookup_batch_sharded_overlay
+        self._scan = scan_batch_sharded_overlay
+        self._stacked_device_arrays = stacked_device_arrays
+        self._update_stacked_shard = update_stacked_shard
+        self.part = part
+        self.gamma = gamma
+        self.auto_compact = auto_compact
+        self.shards = [IndexShard.wrap(idx, gamma, with_arrays=False)
+                       for idx in part.shards]
+        self.sdi = stack_device_indexes([sh.di for sh in self.shards],
+                                        part.bounds)
+        self.stk = self._stacked_device_arrays(self.sdi)
+        # merged-pack capacity floor ~= sum of shard thresholds: one jit
+        # shape for the overlay pack across the shards' whole lifetime
+        self._ov_floor = next_pow2(
+            max(int(gamma * max(part.n_items, 1)), 64))
+        self.ov_arrs = self._merged_overlay_pack()
+        self.restacks = 0                     # full re-stacks (shard outgrew pad)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def compactions(self) -> int:
+        return sum(sh.compactions for sh in self.shards)
+
+    # ------------------------------------------------------------ write path
+    def _apply_write(self, req: IndexRequest) -> None:
+        sh = self.shards[self.part.shard_of(req.key)]
+        req.result = sh.apply_write(req.op, req.key, req.payload)
+        req.done = True
+        self.writes_applied += 1
+
+    def _after_writes(self) -> None:
+        if self.auto_compact:
+            self._maybe_compact()
+        self.ov_arrs = self._merged_overlay_pack()
+
+    def _maybe_compact(self) -> None:
+        """Shard-local compaction: only shards past their own gamma threshold
+        fold their overlay; their mirror slices alone are re-uploaded."""
+        changed = [s for s, sh in enumerate(self.shards)
+                   if sh.needs_compaction(self.gamma)]
+        for s in changed:
+            self.shards[s].compact()
+        if changed:
+            self._refresh_stack(changed)
+
+    def _refresh_stack(self, changed: list[int]) -> None:
+        for s in changed:
+            self.sdi.dis[s] = self.shards[s].di
+        fits = [restack_shard(self.sdi, s, rechain=False) for s in changed]
+        if all(fits):
+            rechain_stacked(self.sdi)   # once, after all re-pads
+            self.stk = self._update_stacked_shard(self.stk, self.sdi, changed)
+        else:   # a shard outgrew its padded pool capacity: re-stack all
+            self.sdi = stack_device_indexes([sh.di for sh in self.shards],
+                                            self.part.bounds)
+            self.stk = self._stacked_device_arrays(self.sdi)
+            self.restacks += 1
+
+    # ----------------------------------------------------------- overlay pack
+    def _merged_overlay_pack(self) -> dict:
+        """Concatenate the shards' sorted overlays into one globally sorted
+        padded pack (same format as ``overlay_arrays``): shard key ranges are
+        disjoint and ordered, so shard order IS global key order."""
+        import jax.numpy as jnp
+        total = sum(len(sh.overlay) for sh in self.shards)
+        cap = max(self._ov_floor, next_pow2(total))
+        pack = np.empty((3, cap), dtype=np.uint64)
+        pack[0] = UINT64_MAX
+        pack[1] = 0
+        pack[2] = 0
+        off = 0
+        for sh in self.shards:
+            n = len(sh.overlay)
+            if not n:
+                continue
+            a = sh.overlay.arrays()
+            pack[0, off:off + n] = a["ov_keys"][:n]
+            pack[1, off:off + n] = a["ov_pay"][:n]
+            pack[2, off:off + n] = a["ov_tomb"][:n]
+            off += n
+        return {"ov_pack": jnp.asarray(pack)}
+
+    # ------------------------------------------------------------- read path
+    # qcap stays at its always-safe default (the padded batch size): a
+    # tighter per-batch lane capacity saves vmapped work but costs one jit
+    # compile per distinct value, which dominates on mixed traffic.
+    def _snap(self) -> dict:
+        return self.stk
+
+    def _ov(self) -> dict:
+        return self.ov_arrs
+
+    def _height(self) -> int:
+        return max(self.sdi.max_inner_height, 3)
+
+    def _overlay_live(self) -> int:
+        return sum(len(sh.overlay) for sh in self.shards)
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            **super().stats(),
+            "num_shards": self.num_shards,
+            "overlay_len": sum(len(sh.overlay) for sh in self.shards),
+            "compactions": self.compactions,
+            "compactions_per_shard": [sh.compactions for sh in self.shards],
+            "mirror_refreshes": sum(sh.di.refreshes for sh in self.shards),
+            "mirror_full_builds": sum(sh.di.full_builds
+                                      for sh in self.shards),
+            "full_restacks": self.restacks,
+        }

@@ -231,6 +231,33 @@ class TestRefresh:
         di2 = refresh_device_index(idx, di)
         assert di2.refreshes == di.refreshes == 1
 
+    def test_noop_refresh_records_empty_touched_rows(self):
+        """Refresh with nothing journaled is a no-op: same mirror object,
+        ``last_touched_rows`` empty (consumers patch zero device rows)."""
+        keys = make_dataset("covid", 1_000, seed=1)
+        idx = small_build(keys)
+        di = build_device_index(idx)
+        di2 = refresh_device_index(idx, di)
+        assert di2 is di
+        assert di2.last_touched_rows is not None
+        assert len(di2.last_touched_rows) == 0
+        assert di2.refreshes == 0 and di2.full_builds == 1
+
+    def test_truncated_journal_under_older_mirror_full_builds(self):
+        """journal_epoch < journal_base (entries truncated away beneath this
+        mirror) must force a full build, never a silent skip."""
+        keys = make_dataset("covid", 1_000, seed=1)
+        idx = small_build(keys)
+        di_old = build_device_index(idx)
+        di_other = build_device_index(idx)
+        idx.update(int(keys[0]), 1)
+        # the other mirror consumes and truncates the journal prefix
+        refresh_device_index(idx, di_other)
+        assert idx.journal_base > di_old.journal_epoch, "precondition"
+        idx.update(int(keys[1]), 2)
+        di_old = refresh_device_index(idx, di_old)
+        assert di_old.full_builds == 2 and di_old.refreshes == 0
+
     def test_second_mirror_not_stranded_by_truncation(self):
         """A mirror snapshotted before another mirror consumed (and
         truncated) the journal must full-rebuild, not skip those writes."""
@@ -251,6 +278,66 @@ class TestRefresh:
                                      height=max(di_b.max_inner_height, 3))
         assert bool(np.asarray(found).all())
         assert np.asarray(pay).tolist() == [111, 222]
+
+
+class TestEmptyMirror:
+    """Empty-index mirrors (ISSUE 5 satellite): ``build_device_index`` on an
+    empty index produces an all-padding leaf pool with ``last_row == L - 1``,
+    and ``refresh_device_index`` survives the empty -> nonempty transition."""
+
+    def _assert_serves_nothing(self, di):
+        arrs = device_arrays(di)
+        from repro.core.lookup import lookup_batch, scan_batch
+        q = jnp.asarray(np.array([0, 5, 2**50], dtype=np.uint64))
+        pay, found, leaf = lookup_batch(arrs, q, height=3)
+        assert not bool(np.asarray(found).any())
+        ks, ps, valid = scan_batch(arrs, q, count=8, height=3)
+        assert not bool(np.asarray(valid).any())
+
+    def test_never_bulkloaded(self):
+        idx = Aulid(BlockDevice(), cfg=AulidConfig(**SMALL_GEOM))
+        di = build_device_index(idx)
+        L = di.leaf_keys.shape[0]
+        assert L == 1 and di.last_leaf_row == L - 1
+        assert (di.leaf_keys == np.uint64(0xFFFFFFFFFFFFFFFF)).all()
+        assert int(di.leaf_count.sum()) == 0 and di.root_node == -1
+        self._assert_serves_nothing(di)
+        # empty -> nonempty: first insert changes the leaf set (SMO
+        # fingerprint), so the refresh full-builds rather than asserting
+        idx.insert(42, 7)
+        di = refresh_device_index(idx, di)
+        assert di.full_builds == 2
+        assert idx.lookup(42) == 7
+        arrs = device_arrays(di)
+        from repro.core.lookup import lookup_batch
+        pay, found, _ = lookup_batch(
+            arrs, jnp.asarray(np.array([42, 43], dtype=np.uint64)), height=3)
+        assert bool(np.asarray(found)[0]) and int(np.asarray(pay)[0]) == 7
+        assert not bool(np.asarray(found)[1])
+
+    def test_bulkloaded_empty_takes_fast_path(self):
+        """bulkload([]) leaves one empty leaf; the first insert is content-
+        only (no SMO), so the refresh may take the journal fast path."""
+        idx = Aulid(BlockDevice(), cfg=AulidConfig(**SMALL_GEOM))
+        idx.bulkload(np.empty(0, dtype=np.uint64),
+                     np.empty(0, dtype=np.uint64))
+        di = build_device_index(idx)
+        assert len(di.leaf_rows) == 1 and int(di.leaf_count.sum()) == 0
+        self._assert_serves_nothing(di)
+        idx.insert(42, 7)
+        di = refresh_device_index(idx, di)
+        assert di.refreshes == 1 and di.full_builds == 1
+        arrs = device_arrays(di)
+        from repro.core.lookup import lookup_batch
+        pay, found, _ = lookup_batch(
+            arrs, jnp.asarray(np.array([42], dtype=np.uint64)), height=3)
+        assert bool(np.asarray(found)[0]) and int(np.asarray(pay)[0]) == 7
+
+    def test_refresh_noop_on_empty(self):
+        idx = Aulid(BlockDevice(), cfg=AulidConfig(**SMALL_GEOM))
+        di = build_device_index(idx)
+        di2 = refresh_device_index(idx, di)
+        assert di2 is di and len(di2.last_touched_rows) == 0
 
 
 class TestIndexEngine:

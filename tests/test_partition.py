@@ -1,0 +1,230 @@
+"""Range partition + stacked device mirrors + sharded batched read path.
+
+Oracle: a shard-parallel read through the stacked mirror must match the host
+indexes queried directly — including scans that cross shard boundaries
+through the precomputed shard-successor leaf chain (DESIGN.md §9).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Aulid, AulidConfig, BlockDevice, partition_bulkload
+from repro.core.device_index import (build_device_index, restack_shard,
+                                     stack_device_indexes)
+from repro.core.lookup import (lookup_batch_sharded, scan_batch_sharded,
+                               stacked_device_arrays, update_stacked_shard)
+from repro.core.workloads import make_dataset, payloads_for
+
+import jax.numpy as jnp
+
+SMALL_GEOM = dict(leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15)
+N, S = 3_000, 4
+
+
+def build_part(name="covid", n=N, num_shards=S):
+    keys = make_dataset(name, n, seed=1)
+    part = partition_bulkload(keys, payloads_for(keys), num_shards,
+                              cfg=AulidConfig(**SMALL_GEOM))
+    return keys, part
+
+
+# One pristine stacked mirror shared by the read-only tests (one jit trace).
+_CACHE: dict = {}
+
+
+def pristine_stack(name="covid"):
+    if name not in _CACHE:
+        keys, part = build_part(name)
+        dis = [build_device_index(sh) for sh in part.shards]
+        sdi = stack_device_indexes(dis, part.bounds)
+        _CACHE[name] = (keys, part, sdi, stacked_device_arrays(sdi),
+                        max(sdi.max_inner_height, 3))
+    return _CACHE[name]
+
+
+def device_lookup(stk, height, queries, qcap=None):
+    q = jnp.asarray(np.asarray(queries, dtype=np.uint64))
+    pay, found, gleaf, sid = lookup_batch_sharded(stk, q, height=height,
+                                                  qcap=qcap)
+    return map(np.asarray, (pay, found, gleaf, sid))
+
+
+def device_scan(stk, height, starts, count=16):
+    s = jnp.asarray(np.asarray(starts, dtype=np.uint64))
+    ks, ps, valid = scan_batch_sharded(stk, s, count=count, height=height)
+    return map(np.asarray, (ks, ps, valid))
+
+
+def assert_scans_match(part, stk, height, starts, count=16):
+    ks, ps, valid = device_scan(stk, height, starts, count)
+    for i, start in enumerate(np.asarray(starts, dtype=np.uint64)):
+        exp = part.scan(int(start), count)
+        n = int(valid[i].sum())
+        got = list(zip(ks[i][:n].tolist(), ps[i][:n].tolist()))
+        assert got == exp, f"scan from {int(start)}"
+
+
+class TestRangePartition:
+    def test_routing_one_searchsorted(self):
+        keys, part = build_part()
+        assert part.num_shards == S and len(part.bounds) == S - 1
+        sid = part.shard_of_batch(keys)
+        for k in keys[:: len(keys) // 50]:
+            assert part.shard_of(int(k)) == sid[np.searchsorted(keys, k)]
+        # boundary keys route to the shard whose inclusive bound they are
+        for s, b in enumerate(part.bounds):
+            assert part.shard_of(int(b)) == s
+            assert part.shard_of(int(b) + 1) == s + 1
+        # extremes route to the first/last shard
+        assert part.shard_of(0) == 0
+        assert part.shard_of(2**64 - 2) == S - 1
+
+    def test_quantile_balance_and_disjoint_ranges(self):
+        keys, part = build_part()
+        sizes = [sh.n_items for sh in part.shards]
+        assert sum(sizes) == len(keys)
+        assert max(sizes) <= 2 * min(sizes), sizes
+        part.check_invariants()
+
+    def test_host_ops_match_monolithic(self):
+        keys, part = build_part(n=1_200, num_shards=3)
+        mono = Aulid(BlockDevice(), cfg=AulidConfig(**SMALL_GEOM))
+        mono.bulkload(keys, payloads_for(keys))
+        rng = np.random.default_rng(0)
+        probes = np.concatenate([rng.choice(keys, 50),
+                                 rng.integers(0, 2**50, 50).astype(np.uint64)])
+        for k in probes:
+            assert part.lookup(int(k)) == mono.lookup(int(k))
+        for k in probes[:10]:
+            assert part.scan(int(k), 12) == mono.scan(int(k), 12)
+
+    def test_duplicate_heavy_bounds_collapse(self):
+        keys = np.sort(np.array([7] * 500 + [9] * 500, dtype=np.uint64))
+        part = partition_bulkload(keys, payloads_for(keys), 4,
+                                  cfg=AulidConfig(**SMALL_GEOM))
+        # a key never splits across shards
+        assert part.num_shards <= 2
+        assert part.n_items == len(keys)
+
+    def test_empty_and_single_shard(self):
+        empty = partition_bulkload(np.empty(0, dtype=np.uint64),
+                                   np.empty(0, dtype=np.uint64), 4,
+                                   cfg=AulidConfig(**SMALL_GEOM))
+        assert empty.num_shards == 1 and empty.lookup(5) is None
+        keys, part = build_part(n=500, num_shards=1)
+        assert part.num_shards == 1
+        assert part.lookup(int(keys[0])) is not None
+
+
+class TestStackedMirror:
+    def test_stacked_shapes_uniform(self):
+        keys, part, sdi, stk, height = pristine_stack()
+        assert sdi.slot_tag.shape[0] == S
+        assert sdi.leaf_keys.shape[0] == S
+        assert sdi.meta.shape == (S, 2)
+        assert sdi.leaf_next_chain.shape[0] == S * sdi.leaf_keys.shape[1]
+        # every shard's pools fit inside the padded capacities
+        for di in sdi.dis:
+            assert di.leaf_keys.shape[0] <= sdi.leaf_keys.shape[1]
+            assert di.slot_tag.shape[0] <= sdi.slot_tag.shape[1]
+
+    def test_chain_is_a_single_global_walk(self):
+        keys, part, sdi, stk, height = pristine_stack()
+        Lmax = sdi.leaf_keys.shape[1]
+        row = 0 * Lmax + 0          # first leaf of shard 0
+        seen = 0
+        while row >= 0:
+            seen += int(sdi.leaf_count.reshape(-1)[row])
+            row = int(sdi.leaf_next_chain[row])
+        assert seen == part.n_items, "chain must visit every pair exactly once"
+
+    def test_lookup_matches_host(self):
+        keys, part, sdi, stk, height = pristine_stack()
+        rng = np.random.default_rng(2)
+        q = np.concatenate([rng.choice(keys, 48),
+                            rng.integers(0, 2**50, 16).astype(np.uint64)])
+        pay, found, gleaf, sid = device_lookup(stk, height, q)
+        for i, k in enumerate(q):
+            exp = part.lookup(int(k))
+            assert (exp is None) == (not found[i]), int(k)
+            if exp is not None:
+                assert int(pay[i]) == exp
+        assert (sid == part.shard_of_batch(q)).all()
+
+    def test_scan_within_shard(self):
+        keys, part, sdi, stk, height = pristine_stack()
+        starts = keys[[10, 100, len(keys) // 2, len(keys) - 40]]
+        assert_scans_match(part, stk, height, starts)
+
+    def test_scan_crosses_shard_boundaries(self):
+        """A scan starting just before each boundary must continue into the
+        next shard through the precomputed shard-successor chain."""
+        keys, part, sdi, stk, height = pristine_stack()
+        starts = []
+        for b in part.bounds:
+            i = int(np.searchsorted(keys, np.uint64(b)))
+            starts.append(int(keys[max(i - 3, 0)]))   # 3 keys before the bound
+        starts.append(int(part.bounds[0]) + 1)        # gap between shards
+        pad = starts[:1] * (8 - len(starts))
+        assert_scans_match(part, stk, height, np.array(starts + pad,
+                                                       dtype=np.uint64))
+
+    def test_scan_outside_key_range(self):
+        keys, part, sdi, stk, height = pristine_stack()
+        starts = np.array([0, int(keys[0]) - 1, int(keys[-1]),
+                           int(keys[-1]) + 1] * 2, dtype=np.uint64)
+        assert_scans_match(part, stk, height, starts)
+
+    def test_qcap_lane_capacity(self):
+        """qcap >= heaviest shard load must reproduce the default result."""
+        keys, part, sdi, stk, height = pristine_stack()
+        q = keys[:32]   # all land in shard 0
+        pay0, found0, _, _ = device_lookup(stk, height, q)
+        pay1, found1, _, _ = device_lookup(stk, height, q, qcap=32)
+        assert (pay0 == pay1).all() and (found0 == found1).all()
+
+
+class TestRestack:
+    def test_restack_patches_hot_shard_only(self):
+        keys, part = build_part(n=2_000, num_shards=3)
+        dis = [build_device_index(sh) for sh in part.shards]
+        sdi = stack_device_indexes(dis, part.bounds)
+        stk = stacked_device_arrays(sdi)
+        height = max(sdi.max_inner_height, 3)
+        cold = [np.array(sdi.leaf_keys[s]) for s in (0, 2)]
+        # writes confined to shard 1's range (content-only: updates)
+        from repro.core.device_index import refresh_device_index
+        lo = int(part.bounds[0]) + 1
+        hot_keys = [int(k) for k in keys if lo <= int(k) <= int(part.bounds[1])]
+        for k in hot_keys[:40]:
+            assert part.update(k, k + 77)
+        epochs_before = [(d.journal_epoch, d.full_builds) for d in sdi.dis]
+        sdi.dis[1] = refresh_device_index(part.shards[1], sdi.dis[1])
+        assert restack_shard(sdi, 1)
+        stk = update_stacked_shard(stk, sdi, [1])
+        # cold shards' mirrors keep their snapshot epoch and their slices
+        for s, arr in zip((0, 2), cold):
+            assert (sdi.leaf_keys[s] == arr).all()
+            assert (sdi.dis[s].journal_epoch,
+                    sdi.dis[s].full_builds) == epochs_before[s]
+        # refreshed payloads serve through the patched stack
+        q = np.array(hot_keys[:8], dtype=np.uint64)
+        pay, found, _, _ = device_lookup(stk, height, q)
+        assert found.all()
+        assert pay.tolist() == [k + 77 for k in hot_keys[:8]]
+
+    def test_restack_refuses_overgrown_shard(self):
+        keys, part = build_part(n=600, num_shards=3)
+        dis = [build_device_index(sh) for sh in part.shards]
+        sdi = stack_device_indexes(dis, part.bounds)
+        Lpad = sdi.leaf_keys.shape[1]
+        # grow shard 0 until its leaf pool exceeds the padded capacity
+        rng = np.random.default_rng(5)
+        hi = int(part.bounds[0])
+        n_new = (Lpad + 2) * SMALL_GEOM["leaf_capacity"]
+        for k in rng.choice(hi - 1, n_new, replace=False):
+            part.shards[0].insert(int(k) + 1, 1)
+        sdi.dis[0] = build_device_index(part.shards[0])
+        assert not restack_shard(sdi, 0)
+        # a full re-stack accommodates it
+        sdi2 = stack_device_indexes(sdi.dis, part.bounds)
+        assert sdi2.leaf_keys.shape[1] >= sdi.dis[0].leaf_keys.shape[0]

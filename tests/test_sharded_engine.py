@@ -1,0 +1,153 @@
+"""ShardedIndexEngine vs the monolithic IndexEngine, request for request.
+
+The acceptance oracle of the range-sharding refactor (DESIGN.md §9): on any
+interleaving of get/insert/delete/scan requests the sharded engine must
+return exactly what the monolithic engine returns, while compacting shard-
+locally (a hot shard folding its overlay leaves cold shards' mirrors at
+their snapshot epoch).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Aulid, AulidConfig, BlockDevice, partition_bulkload
+from repro.core.workloads import make_dataset, payloads_for
+from repro.serving import IndexEngine, ShardedIndexEngine
+from repro.serving.index_engine import pad_queries, scan_bucket
+
+SMALL_GEOM = dict(leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15)
+
+
+def mk_engines(n=1_500, num_shards=3, gamma=0.05, **kw):
+    keys = make_dataset("covid", n, seed=1)
+    pay = payloads_for(keys)
+    part = partition_bulkload(keys, pay, num_shards,
+                              cfg=AulidConfig(**SMALL_GEOM))
+    mono_idx = Aulid(BlockDevice(), cfg=AulidConfig(**SMALL_GEOM))
+    mono_idx.bulkload(keys, pay)
+    return (keys, IndexEngine(mono_idx, gamma=gamma, **kw),
+            ShardedIndexEngine(part, gamma=gamma, **kw))
+
+
+class TestShardedEquivalence:
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_randomized_mixed_trace(self, seed):
+        """Property: both engines answer a randomized mixed trace with
+        identical results (fixed per-step op mix keeps jit shapes shared)."""
+        keys, mono, shrd = mk_engines()
+        rng = np.random.default_rng(seed)
+        pairs = []
+        for step in range(3):
+            for i in range(18):       # 18 gets
+                k = (int(rng.choice(keys)) if rng.random() < 0.6
+                     else int(rng.integers(0, 2**50)))
+                pairs.append((mono.get(k), shrd.get(k)))
+            for i in range(10):       # 10 upserts (new + existing keys)
+                k = (int(rng.integers(0, 2**50)) if rng.random() < 0.7
+                     else int(rng.choice(keys)))
+                p = step * 100 + i
+                pairs.append((mono.insert(k, p), shrd.insert(k, p)))
+            for i in range(5):        # 5 deletes
+                k = (int(rng.choice(keys)) if rng.random() < 0.6
+                     else int(rng.integers(0, 2**50)))
+                pairs.append((mono.delete(k), shrd.delete(k)))
+            for i in range(4):        # 4 scans, one shared length bucket
+                k = int(rng.choice(keys)) if rng.random() < 0.8 \
+                    else int(rng.integers(0, 2**50))
+                c = int(rng.integers(9, 16))
+                pairs.append((mono.scan(k, c), shrd.scan(k, c)))
+            mono.step()
+            shrd.step()
+        for m, s in pairs:
+            assert m.done and s.done
+            assert m.result == s.result, (m.op, m.key, m.count)
+        assert mono.reads_served == shrd.reads_served
+        assert mono.writes_applied == shrd.writes_applied
+        for sh in shrd.shards:
+            sh.idx.check_invariants()
+
+    def test_scan_across_boundary_with_step_writes(self):
+        """A scan straddling a shard boundary sees same-step writes on BOTH
+        sides of the boundary (overlay merge + successor chain)."""
+        keys, mono, shrd = mk_engines(gamma=10.0)   # no compaction
+        b = int(shrd.part.bounds[0])
+        i = int(np.searchsorted(keys, np.uint64(b)))
+        start = int(keys[i - 2])
+        for eng in (mono, shrd):
+            eng.insert(b - 1 if b - 1 not in keys else b, 111)
+            eng.insert(b + 1, 222)
+            eng.delete(int(keys[i - 1]))
+        r_m = mono.scan(start, 10)
+        r_s = shrd.scan(start, 10)
+        mono.step()
+        shrd.step()
+        assert r_m.result == r_s.result
+        got_keys = [k for k, _ in r_s.result]
+        assert b + 1 in got_keys, "must cross into the next shard"
+        assert int(keys[i - 1]) not in got_keys
+
+
+class TestShardLocalCompaction:
+    def test_cold_shards_keep_snapshot_epoch(self):
+        """Writes confined to one shard's range compact that shard only;
+        cold shards' mirrors keep their snapshot epoch (the structural
+        property the p99 benchmark gate rests on)."""
+        keys, mono, shrd = mk_engines(num_shards=4, gamma=0.01)
+        hot = 1
+        lo = int(shrd.part.bounds[0]) + 1
+        hi = int(shrd.part.bounds[1])
+        cold = [s for s in range(4) if s != hot]
+        before = [(shrd.shards[s].di.journal_epoch,
+                   shrd.shards[s].di.full_builds,
+                   shrd.shards[s].di.refreshes) for s in range(4)]
+        rng = np.random.default_rng(0)
+        for step in range(3):
+            for k in rng.integers(lo, hi, 30):
+                shrd.insert(int(k), int(k) % 1000)
+            shrd.step()
+        assert shrd.shards[hot].compactions >= 1
+        for s in cold:
+            assert shrd.shards[s].compactions == 0
+            assert (shrd.shards[s].di.journal_epoch,
+                    shrd.shards[s].di.full_builds,
+                    shrd.shards[s].di.refreshes) == before[s], f"shard {s}"
+        st = shrd.stats()
+        assert st["compactions"] == shrd.shards[hot].compactions
+        assert st["compactions_per_shard"][hot] == st["compactions"]
+
+    def test_empty_to_nonempty_engine(self):
+        """An engine over an empty partition serves its first writes."""
+        part = partition_bulkload(np.empty(0, dtype=np.uint64),
+                                  np.empty(0, dtype=np.uint64), 2,
+                                  cfg=AulidConfig(**SMALL_GEOM))
+        eng = ShardedIndexEngine(part, gamma=0.001)  # compact on every write
+        eng.insert(42, 7)
+        r0 = eng.get(42)
+        eng.step()
+        assert r0.result == 7
+        r1, r2 = eng.get(42), eng.get(43)
+        eng.step()
+        assert r1.result == 7 and r2.result is None
+
+
+class TestScanBucketing:
+    def test_bucket_is_pow2_and_floored(self):
+        assert scan_bucket(1) == 8 and scan_bucket(8) == 8
+        assert scan_bucket(9) == 16 and scan_bucket(100) == 128
+
+    def test_mixed_lengths_share_buckets_and_slice_exact(self):
+        keys = make_dataset("covid", 800, seed=1)
+        idx = Aulid(BlockDevice(), cfg=AulidConfig(**SMALL_GEOM))
+        idx.bulkload(keys, payloads_for(keys))
+        eng = IndexEngine(idx, gamma=10.0)
+        reqs = [eng.scan(int(keys[40]), c) for c in (3, 5, 7, 8, 12, 16)]
+        eng.step()
+        for r, c in zip(reqs, (3, 5, 7, 8, 12, 16)):
+            assert len(r.result) == c
+            assert r.result == idx.scan(int(keys[40]), c)
+        # 6 distinct lengths collapse into 2 compile buckets (8 and 16)
+        assert len({scan_bucket(c) for c in (3, 5, 7, 8, 12, 16)}) == 2
+
+    def test_pad_queries_pow2(self):
+        q = pad_queries([1, 2, 3])
+        assert q.shape == (4,) and q[3] == np.uint64(0xFFFFFFFFFFFFFFFF)
+        assert pad_queries([1]).shape == (1,)
