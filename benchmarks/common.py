@@ -80,6 +80,28 @@ INDEXES = ["aulid", "fiting", "pgm", "btree", "alex", "lipp"]
 DATASETS = ["covid", "planet", "genome", "osm"]
 
 
+def timed(fn, *, warmup: int = 2, reps: int = 5):
+    """Time ``fn()`` and return ``(seconds_per_call, last_result)``.
+
+    One helper for every benchmark that times device work: ``warmup`` calls
+    absorb jit compiles, and ``jax.block_until_ready`` runs on the result
+    INSIDE the timed region so jax's async dispatch cannot leak device work
+    past the clock.  Works on arbitrary result pytrees (non-jax leaves pass
+    through).  Stateful workloads (e.g. driving a serving engine) should
+    pass ``warmup=0, reps=1`` — the call mutates state, so only one
+    wall-clock measurement is meaningful.
+    """
+    import jax
+    reps = max(int(reps), 1)
+    out = None
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps, out
+
+
 def save_results(name: str, rows: list[dict], meta: dict | None = None):
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     out = {"benchmark": name, "meta": meta or {},

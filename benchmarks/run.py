@@ -22,20 +22,42 @@ MODULES = ["workloads", "bulkload", "tail_latency", "scalability",
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
-def emit_bench_serving() -> pathlib.Path | None:
+def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
     """Collate the serving benchmarks' saved rows into one machine-readable
     `BENCH_serving.json` at the repo root: per-engine throughput, p99 step
-    latency, and compaction counts (monolithic vs sharded), so the serving
-    perf trajectory accumulates across PRs (ROADMAP open items)."""
+    latency, compaction counts (monolithic vs sharded), and the device read
+    path (jnp vs fused Pallas kernel, per-geometry tuning choice), so the
+    serving perf trajectory accumulates across PRs (ROADMAP open items).
+
+    Sections merge, never fork: only the sections whose source module ran
+    fresh in THIS invocation (``fresh``) are rebuilt — the others are
+    carried over from the existing snapshot with their own `generated`
+    stamps intact, so leftover rows from an old run are never re-stamped
+    as current."""
     from .common import RESULTS_DIR
-    engines = {}
-    meta = {}
+    out = REPO_ROOT / "BENCH_serving.json"
+    doc = {"benchmark": "serving", "engines": {}, "device_lookup": {},
+           "meta": {}}
+    if out.exists():
+        try:
+            prev = json.loads(out.read_text())
+            for key in ("engines", "device_lookup", "meta"):
+                doc[key] = prev.get(key, doc[key])
+        except ValueError:
+            pass
+    if fresh is None:
+        fresh = {"sharded_serving", "mixed_serving", "device_lookup"}
+    stamp = time.strftime("%Y-%m-%d %H:%M:%S")
+    changed = False
+
     sharded = RESULTS_DIR / "sharded_serving.json"
-    if sharded.exists():
+    if "sharded_serving" in fresh and sharded.exists():
         data = json.loads(sharded.read_text())
-        meta["sharded_serving"] = data.get("meta", {})
+        doc["meta"]["sharded_serving"] = {**data.get("meta", {}),
+                                          "generated": stamp}
+        doc["engines"] = {}
         for row in data["rows"]:
-            engines[row["engine"]] = {
+            doc["engines"][row["engine"]] = {
                 "shards": row.get("shards", 1),
                 "throughput_ops_s": row.get("throughput_ops_s"),
                 "p99_step_ms": row.get("p99_step_ms"),
@@ -45,15 +67,33 @@ def emit_bench_serving() -> pathlib.Path | None:
                 "mirror_refreshes": row.get("mirror_refreshes"),
                 "p99_speedup_vs_monolithic": row.get("p99_speedup"),
             }
+        changed = True
     mixed = RESULTS_DIR / "mixed_serving.json"
-    if mixed.exists():
-        meta["mixed_serving"] = json.loads(mixed.read_text()).get("meta", {})
-    if not engines:
+    if "mixed_serving" in fresh and mixed.exists():
+        doc["meta"]["mixed_serving"] = {
+            **json.loads(mixed.read_text()).get("meta", {}),
+            "generated": stamp}
+        changed = True
+    device = RESULTS_DIR / "device_lookup.json"
+    if "device_lookup" in fresh and device.exists():
+        data = json.loads(device.read_text())
+        doc["meta"]["device_lookup"] = {**data.get("meta", {}),
+                                        "generated": stamp}
+        doc["device_lookup"] = {}
+        for row in data["rows"]:
+            doc["device_lookup"][row["dataset"]] = {
+                "jnp_batch_qps": row.get("device_batch_qps"),
+                "fused_kernel_qps": row.get("fused_kernel_qps"),
+                "fused_speedup_vs_jnp": row.get("fused_speedup_vs_jnp"),
+                "strategy": row.get("strategy"),
+                "rows_dma_per_query": row.get("rows_dma_per_query"),
+                "kernel_block_rounds": row.get("kernel_block_rounds"),
+            }
+        changed = True
+    if not changed or not (doc["engines"] or doc["device_lookup"]):
         return None
-    out = REPO_ROOT / "BENCH_serving.json"
-    out.write_text(json.dumps(
-        {"benchmark": "serving", "engines": engines, "meta": meta,
-         "generated": time.strftime("%Y-%m-%d %H:%M:%S")}, indent=1))
+    doc["generated"] = stamp
+    out.write_text(json.dumps(doc, indent=1))
     return out
 
 
@@ -76,11 +116,13 @@ def main():
         except Exception:
             failures.append(name)
             traceback.print_exc()
-    # emit only when sharded_serving (the source of both engines' rows) ran
-    # fresh in THIS invocation — re-stamping leftover rows from an old run
-    # would present stale numbers as current
-    if "sharded_serving" in mods and "sharded_serving" not in failures:
-        path = emit_bench_serving()
+    # rebuild only the sections whose source module ran fresh in THIS
+    # invocation — re-stamping leftover rows from an old run would present
+    # stale numbers as current (other sections carry over unchanged)
+    fresh = {m for m in ("sharded_serving", "mixed_serving", "device_lookup")
+             if m in mods and m not in failures}
+    if fresh:
+        path = emit_bench_serving(fresh)
         if path is not None:
             print(f"serving perf snapshot written to {path}", flush=True)
     if failures:

@@ -23,15 +23,13 @@ Acceptance gates (asserted inline):
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import Aulid, partition_bulkload
 from repro.core.workloads import make_dataset, payloads_for
 from repro.serving import IndexEngine, ShardedIndexEngine
 
-from .common import SCALE_N, print_table, save_results
+from .common import SCALE_N, print_table, save_results, timed
 
 NUM_SHARDS = 8
 GAMMA = 0.02
@@ -98,12 +96,9 @@ def run(scale: str = "small") -> list[dict]:
                       shrd.shards[s].di.refreshes) for s in range(
                           shrd.num_shards)]
 
-    t0 = time.time()
-    r_mono = _drive(mono, steps)
-    t_mono = time.time() - t0
-    t0 = time.time()
-    r_shrd = _drive(shrd, steps)
-    t_shrd = time.time() - t0
+    # stateful drives: one measured pass each (see common.timed)
+    t_mono, r_mono = timed(lambda: _drive(mono, steps), warmup=0, reps=1)
+    t_shrd, r_shrd = timed(lambda: _drive(shrd, steps), warmup=0, reps=1)
 
     # ---- gate 1: compactions stayed shard-local (cold mirrors keep epoch)
     assert shrd.shards[hot].compactions >= 1, "hot shard never compacted"

@@ -87,6 +87,22 @@ class DeviceIndex:
     def max_inner_height(self) -> int:
         return max(self.inner_height, 1)
 
+    def pool_geometry(self) -> dict:
+        """Static pool-shape metadata for the fused-kernel tuning layer
+        (``kernels.fused_lookup.tuning.PoolGeometry.from_pools``) — plain
+        ints so the core layer stays free of kernel imports."""
+        return {
+            "num_shards": 1,
+            "slot_pool": int(self.slot_tag.shape[0]),
+            "node_pool": int(self.node_base.shape[0]),
+            "pa_pool": int(self.pa_keys.shape[0]),
+            "pa_cap": int(self.pa_keys.shape[1]),
+            "bt_pool": int(self.bt_keys.shape[0]),
+            "bt_cap": int(self.bt_keys.shape[1]),
+            "leaf_pool": int(self.leaf_keys.shape[0]),
+            "leaf_cap": int(self.leaf_keys.shape[1]),
+        }
+
 
 def build_device_index(idx: Aulid) -> DeviceIndex:
     """Snapshot an AULID host index into flat device pools."""
@@ -284,6 +300,21 @@ class StackedDeviceIndex:
     @property
     def max_inner_height(self) -> int:
         return max(max(di.max_inner_height for di in self.dis), 1)
+
+    def pool_geometry(self) -> dict:
+        """Per-shard padded pool shapes (the stacked twin of
+        :meth:`DeviceIndex.pool_geometry`)."""
+        return {
+            "num_shards": self.num_shards,
+            "slot_pool": int(self.slot_tag.shape[1]),
+            "node_pool": int(self.node_base.shape[1]),
+            "pa_pool": int(self.pa_keys.shape[1]),
+            "pa_cap": int(self.pa_keys.shape[2]),
+            "bt_pool": int(self.bt_keys.shape[1]),
+            "bt_cap": int(self.bt_keys.shape[2]),
+            "leaf_pool": int(self.leaf_keys.shape[1]),
+            "leaf_cap": int(self.leaf_keys.shape[2]),
+        }
 
 
 _STACK_2D = [("slot_tag", 0), ("slot_key", UINT64_MAX), ("slot_ptr", -1),

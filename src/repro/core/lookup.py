@@ -451,6 +451,48 @@ def lookup_batch_sharded_overlay(stk: dict, ovr: dict, q: jnp.ndarray,
     return jnp.where(found, pay, 0), found, gleaf
 
 
+# --------------------------------------------------------------------- backend
+# Read-backend dispatch (DESIGN.md §10): the serving engines bind their point-
+# lookup entry through here, so the fused Pallas kernel and the jnp gather
+# path are interchangeable behind one switch.  The jnp path stays the
+# correctness oracle; "auto" resolves to it on CPU (the automatic fallback)
+# and to the compiled fused kernel on a Pallas-capable backend.  Scans always
+# run the jnp path — the fused kernel covers point lookups.
+
+READ_BACKENDS = ("auto", "jnp", "fused", "fused_interpret")
+
+
+def resolve_read_backend(backend: str = "auto") -> str:
+    """Resolve "auto" against the jax backend: the fused kernel needs a real
+    Pallas lowering (TPU); everywhere else the jnp path serves reads."""
+    if backend not in READ_BACKENDS:
+        raise ValueError(f"backend must be one of {READ_BACKENDS}, "
+                         f"got {backend!r}")
+    if backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+def lookup_backend_fns(backend: str = "auto", *, sharded: bool = False):
+    """The overlay-merged point-lookup entry for a read backend, callable as
+    ``fn(snap, ovr, q, height=...)`` — the engines' ``self._lookup`` shape.
+
+    "fused" on a non-TPU backend silently degrades to interpret mode (still
+    the fused kernel, still exact — just not compiled); "fused_interpret"
+    forces interpret mode everywhere (what tier-1 CI exercises)."""
+    b = resolve_read_backend(backend)
+    if b == "jnp":
+        return lookup_batch_sharded_overlay if sharded \
+            else lookup_batch_overlay
+    from ..kernels.fused_lookup.ops import (
+        fused_lookup_batch_overlay, fused_lookup_batch_sharded_overlay)
+    fn = fused_lookup_batch_sharded_overlay if sharded \
+        else fused_lookup_batch_overlay
+    interpret = (b == "fused_interpret"
+                 or jax.default_backend() != "tpu")
+    return functools.partial(fn, interpret=interpret)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("height", "count", "max_blocks", "qcap",
                                     "ov_bound"))

@@ -1,0 +1,15 @@
+"""Fused lookup kernel package: one Pallas launch for the whole batched read
+pipeline (route → inner probe → leaf search → overlay merge), with a
+geometry-driven tiling-strategy layer.  See ``fused_lookup.py`` for the
+kernel, ``tuning.py`` for strategy selection, ``ops.py`` for the public
+entry points, and ``ref.py`` for the jnp oracle."""
+from .ops import (autotune_strategy, compiled_backend_available,
+                  fused_lookup_batch, fused_lookup_batch_overlay,
+                  fused_lookup_batch_sharded,
+                  fused_lookup_batch_sharded_overlay)
+from .tuning import PoolGeometry, TileStrategy, choose_strategy
+
+__all__ = ["autotune_strategy", "compiled_backend_available",
+           "fused_lookup_batch", "fused_lookup_batch_overlay",
+           "fused_lookup_batch_sharded", "fused_lookup_batch_sharded_overlay",
+           "PoolGeometry", "TileStrategy", "choose_strategy"]

@@ -1,0 +1,361 @@
+"""Fused Pallas lookup kernel: route → inner probe → leaf search → overlay
+merge in ONE launch (DESIGN.md §10).
+
+The sibling kernels (``inner_probe``, ``leaf_search``, ``overlay_probe``)
+each cover one traversal stage and need a separate launch per stage — with
+the inner probe re-launched once per level because its scalar-prefetched
+BlockSpec row indices must be known *before* the launch.  Fusing the stages
+moves the row computation into the kernel, so the whole batched read pipeline
+of ``core.lookup`` runs as one grid over query tiles:
+
+* **resident pools** — the slot/node/PA/BT pools (AULID's "inner part cached
+  in RAM", paper §5.1) and the packed delta overlay ride constant-index-map
+  BlockSpecs: they stream HBM→VMEM once and stay resident across the grid.
+* **route** — the shard id is one plane-split compare against the boundary
+  table (the in-kernel twin of ``lookup_batch_sharded``'s searchsorted);
+  every pool gather then offsets by ``sid * pool_len``, replicating the
+  vmapped per-shard ``mode="clip"`` semantics exactly.  Monolithic mirrors
+  are the S=1 special case of the same kernel.
+* **inner probe** — the unrolled ``height``-round traversal of
+  ``lookup_batch``: FMCD prediction (f64, see below), ``STALE_STEPS``
+  successor-chain walk of deterministic plane-split max-key compares, tag
+  dispatch with whole-block PA/BT searches.
+* **leaf search** — per the tuning layer either *persistent* (leaf pool also
+  VMEM-resident; vectorized row gather) or *looped* (leaf pool stays in HBM
+  via ``pltpu.ANY``; an in-kernel ``make_async_copy`` DMAs exactly ONE
+  ``(4, C)`` leaf row per query — the paper's one-block-per-probe fetch,
+  executed literally).
+* **overlay merge** — ``_overlay_probe``'s sorted-pack consultation happens
+  in-register on the resident overlay planes; an overlay hit wins, a
+  tombstone hides the key.
+
+u64 keys/payloads travel as u32 planes (no 64-bit TPU lanes).  The FMCD
+slot prediction is kept in f64 *inside* the kernel: bit-identical parity
+with the jnp oracle requires exact ``floor(slope*q + intercept)``, and the
+query's f64 value is reconstructed exactly from its planes
+(``hi*2^32 + lo`` rounds once, same as the direct u64→f64 convert).  On
+TPUs without f64 kernel support the ops layer falls back to the jnp path —
+see ``ops.compiled_backend_available``.
+
+Every arithmetic step mirrors ``core.lookup.lookup_batch`` /
+``lookup_batch_overlay`` / ``lookup_batch_sharded`` operation-for-operation
+(same clips, same ``% cap`` wraps, same merge order), which is what the
+bit-identical parity suite ``tests/test_fused_lookup.py`` asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.lookup import (STALE_STEPS, TAG_BT, TAG_DATA, TAG_MIXED,
+                            TAG_PA)  # noqa: F401  (import enables x64)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Static kernel shape: pool geometry + resolved tile strategy.
+
+    Hashable — it keys the jit cache of :func:`fused_lookup_planes`."""
+    num_shards: int
+    slot_pool: int          # Sm — slots per shard
+    node_pool: int          # Nm
+    pa_pool: int
+    pa_cap: int
+    bt_pool: int
+    bt_cap: int
+    leaf_pool: int          # Lm — leaf rows per shard
+    leaf_cap: int           # C
+    bounds_len: int         # padded boundary-table length
+    overlay_cap: int        # K (>= 1 even when unused)
+    qb: int                 # queries per grid step
+    height: int
+    stale_steps: int
+    leaf_resident: bool     # persistent (True) vs looped leaf stage
+    gather: str             # "take" | "onehot"
+    sharded: bool           # route against bounds (False -> sid = 0)
+    has_overlay: bool
+
+
+def _lt(ah, al, bh, bl):
+    """(ah,al) < (bh,bl) lexicographic on u32 planes (exact u64 compare)."""
+    return (ah < bh) | ((ah == bh) & (al < bl))
+
+
+def _make_kernel(cfg: KernelConfig):
+    QB = cfg.qb
+    Sm, Nm, Pm, Bm, Lm = (cfg.slot_pool, cfg.node_pool, cfg.pa_pool,
+                          cfg.bt_pool, cfg.leaf_pool)
+    pc, bc, lc = cfg.pa_cap, cfg.bt_cap, cfg.leaf_cap
+    take = cfg.gather == "take"
+
+    def iota1(n):
+        # TPU requires >= 2D iota; slice the broadcast form (sibling idiom)
+        return jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
+
+    def gv(vec, idx):
+        """vec (X,), idx (QB,) pre-clipped -> vec[idx] (QB,)."""
+        if take:
+            return jnp.take(vec, idx, mode="clip")
+        oh = iota1(vec.shape[0])[None, :] == idx[:, None]
+        return jnp.sum(jnp.where(oh, vec[None, :],
+                                 jnp.zeros_like(vec)[None, :]),
+                       axis=1, dtype=vec.dtype)
+
+    def grows(mat, rows):
+        """mat (R, C), rows (QB,) pre-clipped -> (QB, C) row gather."""
+        if take:
+            return jnp.take(mat, rows, axis=0, mode="clip")
+        oh = iota1(mat.shape[0])[None, :] == rows[:, None]
+        return jnp.sum(jnp.where(oh[:, :, None], mat[None, :, :],
+                                 jnp.zeros((), mat.dtype)),
+                       axis=1, dtype=mat.dtype)
+
+    def gcols(mat, cols):
+        """mat (QB, C), cols (QB,) -> mat[i, cols[i]] (QB,)."""
+        if take:
+            return jnp.take_along_axis(mat, cols[:, None], axis=1)[:, 0]
+        oh = iota1(mat.shape[1])[None, :] == cols[:, None]
+        return jnp.sum(jnp.where(oh, mat, jnp.zeros((), mat.dtype)),
+                       axis=1, dtype=mat.dtype)
+
+    def kernel(ts_ref,                                   # scalar prefetch (T,)
+               qh_ref, ql_ref,                           # (1, QB) query planes
+               slots_ref, skey_ref,                      # slot pools
+               node_i_ref, node_f_ref,                   # node tables
+               pak_ref, pap_ref, btk_ref, btp_ref,       # PA / BT pools
+               leaf_ref,                                 # (S*Lm, 4, lc)
+               meta_ref, llm_ref, bounds_ref,            # per-shard meta
+               ovk_ref, ovt_ref,                         # overlay planes
+               ph_ref, pl_ref, fnd_ref, lf_ref, sid_ref,  # (1, QB) outputs
+               *scratch):
+        del ts_ref
+        qh = qh_ref[0, :]
+        ql = ql_ref[0, :]
+
+        # ---- route: sid = count(bounds < q), the searchsorted-left twin
+        if cfg.sharded:
+            bh = bounds_ref[0, :]
+            bl = bounds_ref[1, :]
+            sid = jnp.sum(_lt(bh[None, :], bl[None, :],
+                              qh[:, None], ql[:, None]).astype(jnp.int32),
+                          axis=1, dtype=jnp.int32)
+        else:
+            sid = jnp.zeros((QB,), jnp.int32)
+
+        root = gv(meta_ref[0, :], sid)
+        last_row = gv(meta_ref[1, :], sid)
+        # metanode shortcut: q >= last_leaf_min goes straight to the last leaf
+        in_last = ~_lt(qh, ql, gv(llm_ref[0, :], sid), gv(llm_ref[1, :], sid))
+
+        node = jnp.maximum(root, 0)
+        done = in_last | (root < 0)
+        leaf = jnp.where(done, last_row, jnp.full((QB,), -1, jnp.int32))
+
+        # exact f64 query value from planes (single rounding, == u64 convert)
+        qf = qh.astype(jnp.float64) * 4294967296.0 + ql.astype(jnp.float64)
+
+        tags = slots_ref[0, :]
+        ptrs = slots_ref[1, :]
+        nocc = slots_ref[2, :]
+        succ = slots_ref[3, :]
+        skh = skey_ref[0, :]
+        skl = skey_ref[1, :]
+
+        for _ in range(cfg.height):
+            nidx = sid * Nm + jnp.clip(node, 0, Nm - 1)
+            base = gv(node_i_ref[0, :], nidx)
+            fanout = gv(node_i_ref[1, :], nidx)
+            overflow = gv(node_i_ref[2, :], nidx)
+            slope = gv(node_f_ref[0, :], nidx)
+            inter = gv(node_f_ref[1, :], nidx)
+            pred = jnp.clip(jnp.floor(slope * qf + inter) - 1.0, 0.0,
+                            (fanout - 1).astype(jnp.float64)
+                            ).astype(jnp.int32)
+            s = gv(nocc, sid * Sm + jnp.clip(base + pred, 0, Sm - 1))
+            s = jnp.where(s < 0, overflow, s)
+            # stale-skip walk along the successor chain (max key < q)
+            for _ in range(cfg.stale_steps):
+                scl = sid * Sm + jnp.clip(s, 0, Sm - 1)
+                stale = (s >= 0) & _lt(gv(skh, scl), gv(skl, scl), qh, ql)
+                s = jnp.where(stale, gv(succ, scl), s)
+            ended = s < 0
+            scl = sid * Sm + jnp.clip(s, 0, Sm - 1)
+            tag = gv(tags, scl)
+            ptr = gv(ptrs, scl)
+
+            # PA / BT: one whole-block plane-split search per level
+            parow = sid * Pm + jnp.clip(jnp.maximum(ptr, 0), 0, Pm - 1)
+            pa_kh = grows(pak_ref[0], parow)
+            pa_kl = grows(pak_ref[1], parow)
+            pa_pos = jnp.sum(_lt(pa_kh, pa_kl, qh[:, None],
+                                 ql[:, None]).astype(jnp.int32),
+                             axis=1, dtype=jnp.int32)
+            pa_hit = gcols(grows(pap_ref[:, :], parow), pa_pos % pc)
+            btrow = sid * Bm + jnp.clip(jnp.maximum(ptr, 0), 0, Bm - 1)
+            bt_kh = grows(btk_ref[0], btrow)
+            bt_kl = grows(btk_ref[1], btrow)
+            bt_pos = jnp.sum(_lt(bt_kh, bt_kl, qh[:, None],
+                                 ql[:, None]).astype(jnp.int32),
+                             axis=1, dtype=jnp.int32)
+            bt_hit = gcols(grows(btp_ref[:, :], btrow), bt_pos % bc)
+
+            is_mixed = (tag == TAG_MIXED) & ~ended
+            step_leaf = jnp.where(ended, last_row,
+                        jnp.where(tag == TAG_DATA, ptr,
+                        jnp.where(tag == TAG_PA, pa_hit,
+                        jnp.where(tag == TAG_BT, bt_hit, -1))))
+            newly = ~done & ~is_mixed
+            leaf = jnp.where(newly, step_leaf, leaf)
+            done = done | newly
+            node = jnp.where(~done & is_mixed, ptr, node)
+
+        # ---- leaf stage
+        leaf = jnp.maximum(leaf, 0)
+        lrow = sid * Lm + jnp.clip(leaf, 0, Lm - 1)
+        if cfg.leaf_resident:
+            if take:
+                rows = jnp.take(leaf_ref[...], lrow, axis=0, mode="clip")
+                kh_m, kl_m = rows[:, 0, :], rows[:, 1, :]
+                ph_m, pl_m = rows[:, 2, :], rows[:, 3, :]
+            else:
+                kh_m = grows(leaf_ref[:, 0, :], lrow)
+                kl_m = grows(leaf_ref[:, 1, :], lrow)
+                ph_m = grows(leaf_ref[:, 2, :], lrow)
+                pl_m = grows(leaf_ref[:, 3, :], lrow)
+            pos = jnp.sum(_lt(kh_m, kl_m, qh[:, None],
+                              ql[:, None]).astype(jnp.int32),
+                          axis=1, dtype=jnp.int32)
+            posm = pos % lc
+            fnd = (pos < lc) & (gcols(kh_m, posm) == qh) \
+                & (gcols(kl_m, posm) == ql)
+            pay_h = gcols(ph_m, posm)
+            pay_l = gcols(pl_m, posm)
+        else:
+            vscr, sem = scratch
+
+            def body(j, carry):
+                ph_a, pl_a, f_a = carry
+                cp = pltpu.make_async_copy(leaf_ref.at[lrow[j]], vscr, sem)
+                cp.start()
+                cp.wait()
+                row = vscr[...]
+                rkh, rkl, rph, rpl = row[0], row[1], row[2], row[3]
+                qhj, qlj = qh[j], ql[j]
+                pos = jnp.sum(_lt(rkh, rkl, qhj, qlj).astype(jnp.int32),
+                              dtype=jnp.int32)
+                posm = pos % lc
+                fj = (pos < lc) & (rkh[posm] == qhj) & (rkl[posm] == qlj)
+                onej = iota1(QB) == j
+                return (jnp.where(onej, rph[posm], ph_a),
+                        jnp.where(onej, rpl[posm], pl_a),
+                        jnp.where(onej, fj.astype(jnp.int32), f_a))
+
+            pay_h, pay_l, f_i = jax.lax.fori_loop(
+                0, QB, body, (jnp.zeros((QB,), jnp.uint32),
+                              jnp.zeros((QB,), jnp.uint32),
+                              jnp.zeros((QB,), jnp.int32)))
+            fnd = f_i.astype(bool)
+
+        pay_h = jnp.where(fnd, pay_h, jnp.uint32(0))
+        pay_l = jnp.where(fnd, pay_l, jnp.uint32(0))
+
+        # ---- overlay merge, in-register on the resident pack
+        if cfg.has_overlay:
+            okh, okl = ovk_ref[0, :], ovk_ref[1, :]
+            oph, opl = ovk_ref[2, :], ovk_ref[3, :]
+            otb = ovt_ref[0, :]
+            K = okh.shape[0]
+            opos = jnp.sum(_lt(okh[None, :], okl[None, :], qh[:, None],
+                               ql[:, None]).astype(jnp.int32),
+                           axis=1, dtype=jnp.int32)
+            oposc = jnp.clip(opos, 0, K - 1)
+            hit = (opos < K) & (gv(okh, oposc) == qh) & (gv(okl, oposc) == ql)
+            tomb = hit & (gv(otb, oposc) != 0)
+            win = hit & ~tomb
+            pay_h = jnp.where(win, gv(oph, oposc), pay_h)
+            pay_l = jnp.where(win, gv(opl, oposc), pay_l)
+            fnd = jnp.where(hit, ~tomb, fnd)
+            pay_h = jnp.where(fnd, pay_h, jnp.uint32(0))
+            pay_l = jnp.where(fnd, pay_l, jnp.uint32(0))
+
+        ph_ref[0, :] = pay_h
+        pl_ref[0, :] = pay_l
+        fnd_ref[0, :] = fnd.astype(jnp.int32)
+        lf_ref[0, :] = leaf
+        sid_ref[0, :] = sid
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def fused_lookup_planes(cfg: KernelConfig, tile_starts, qh, ql,
+                        slots_i32, slot_key, node_i32, node_f64,
+                        pa_keys, pa_ptrs, bt_keys, bt_ptrs, leaf_pack,
+                        meta, llm, bounds, ov_u32, ov_tomb, *,
+                        interpret: bool = True):
+    """Launch the fused kernel over (T, QB) query-plane tiles.
+
+    ``tile_starts`` (T,) i32 is the scalar-prefetched grid→tile map driving
+    the query/output BlockSpec index maps (identity today; the indirection
+    is the hook for tile reordering).  Returns five (T, QB) planes:
+    payload hi/lo (u32), found (i32), local leaf row (i32), shard id (i32).
+    """
+    T, QB = qh.shape
+    assert QB == cfg.qb, (QB, cfg.qb)
+    S = cfg.num_shards
+
+    tile = pl.BlockSpec((1, QB), lambda i, ts: (ts[i], 0))
+
+    def res2(r, c):          # VMEM-resident across the grid: constant map
+        return pl.BlockSpec((r, c), lambda i, ts: (0, 0))
+
+    def res3(a, b, c):
+        return pl.BlockSpec((a, b, c), lambda i, ts: (0, 0, 0))
+
+    if cfg.leaf_resident:
+        leaf_spec = res3(S * cfg.leaf_pool, 4, cfg.leaf_cap)
+        scratch = []
+    else:
+        leaf_spec = pl.BlockSpec(memory_space=pltpu.ANY)  # stays in HBM
+        scratch = [pltpu.VMEM((4, cfg.leaf_cap), jnp.uint32),
+                   pltpu.SemaphoreType.DMA]
+
+    in_specs = [
+        tile, tile,                                        # qh, ql
+        res2(4, S * cfg.slot_pool), res2(2, S * cfg.slot_pool),
+        res2(3, S * cfg.node_pool), res2(2, S * cfg.node_pool),
+        res3(2, S * cfg.pa_pool, cfg.pa_cap),
+        res2(S * cfg.pa_pool, cfg.pa_cap),
+        res3(2, S * cfg.bt_pool, cfg.bt_cap),
+        res2(S * cfg.bt_pool, cfg.bt_cap),
+        leaf_spec,
+        res2(2, S), res2(2, S), res2(2, cfg.bounds_len),
+        res2(4, cfg.overlay_cap), res2(1, cfg.overlay_cap),
+    ]
+    out = pl.BlockSpec((1, QB), lambda i, ts: (ts[i], 0))
+    outs = pl.pallas_call(
+        _make_kernel(cfg),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(T,),
+            in_specs=in_specs,
+            out_specs=[out] * 5,
+            scratch_shapes=scratch,
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((T, QB), jnp.uint32),
+            jax.ShapeDtypeStruct((T, QB), jnp.uint32),
+            jax.ShapeDtypeStruct((T, QB), jnp.int32),
+            jax.ShapeDtypeStruct((T, QB), jnp.int32),
+            jax.ShapeDtypeStruct((T, QB), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_starts, qh, ql, slots_i32, slot_key, node_i32, node_f64,
+      pa_keys, pa_ptrs, bt_keys, bt_ptrs, leaf_pack, meta, llm, bounds,
+      ov_u32, ov_tomb)
+    return outs

@@ -1,0 +1,282 @@
+"""Driver for the fused lookup kernel: operand packing, caching, strategy
+resolution, and entry points mirroring the ``core.lookup`` signatures.
+
+The kernel consumes u32-plane-packed pools (``fused_lookup.py`` module doc);
+packing a mirror costs one pass over every pool, so prepared operands are
+cached per snapshot dict.  The cache key is the identity of the operand dict
+*and* of its member arrays: every mutation path in the repo
+(``update_leaf_rows``, ``update_stacked_shard``, engine overlay refreshes)
+returns a NEW dict / new member arrays, so identity equality is exactly
+snapshot equality.  Cached dicts are pinned (strong refs) so ids cannot be
+recycled while an entry lives; the cache is a small FIFO.
+
+Entry points (drop-in for the jnp read path, same return conventions):
+
+* :func:`fused_lookup_batch`            == ``lookup_batch``
+* :func:`fused_lookup_batch_overlay`    == ``lookup_batch_overlay``
+* :func:`fused_lookup_batch_sharded`    == ``lookup_batch_sharded``
+* :func:`fused_lookup_batch_sharded_overlay`
+                                        == ``lookup_batch_sharded_overlay``
+
+``interpret=None`` resolves from the jax backend: compiled on TPU, interpret
+mode elsewhere (the CPU fallback the backend switch in ``core.lookup``
+relies on).  Strategy defaults to :func:`tuning.choose_strategy`; pass one
+explicitly (or via :func:`autotune_strategy`) to override.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+from ...core.lookup import _DEVICE_FIELDS, STALE_STEPS
+
+import jax.numpy as jnp  # noqa: E402  (x64 enabled by the lookup import)
+
+from . import tuning  # noqa: E402
+from .fused_lookup import KernelConfig, fused_lookup_planes  # noqa: E402
+
+UMAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+_MIN_BOUNDS = 8  # boundary-table pad floor (u64-max filled, never counted)
+
+
+# ----------------------------------------------------------------- capability
+def compiled_backend_available() -> tuple[bool, str]:
+    """Whether a real (non-interpret) kernel launch is available, plus a
+    human-readable reason when it is not."""
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return True, "tpu"
+    return False, (f"no Pallas-capable backend (jax default_backend="
+                   f"{backend!r}); fused kernel runs in interpret mode")
+
+
+def _resolve_interpret(interpret) -> bool:
+    if interpret is None:
+        return not compiled_backend_available()[0]
+    return bool(interpret)
+
+
+# ------------------------------------------------------------ operand packing
+def _planes(a: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    a = np.ascontiguousarray(a, dtype=np.uint64)
+    return ((a >> np.uint64(32)).astype(np.uint32),
+            (a & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+class FusedOperands:
+    """Plane-packed device operands for one mirror snapshot."""
+
+    def __init__(self, arrs: dict):
+        stacked = arrs["leaf_keys"].ndim == 3
+
+        def flat(name):
+            v = np.asarray(arrs[name])
+            return v.reshape(-1, *v.shape[2:]) if stacked else v
+
+        self.sharded = stacked
+        skh, skl = _planes(flat("slot_key"))
+        self.slots_i32 = jnp.asarray(np.stack([
+            flat("slot_tag").astype(np.int32),
+            flat("slot_ptr").astype(np.int32),
+            flat("next_occ").astype(np.int32),
+            flat("succ_slot").astype(np.int32)]))
+        self.slot_key = jnp.asarray(np.stack([skh, skl]))
+        self.node_i32 = jnp.asarray(np.stack([
+            flat("node_base").astype(np.int32),
+            flat("node_fanout").astype(np.int32),
+            flat("node_overflow_slot").astype(np.int32)]))
+        self.node_f64 = jnp.asarray(np.stack([
+            flat("node_slope").astype(np.float64),
+            flat("node_intercept").astype(np.float64)]))
+        self.pa_keys = jnp.asarray(np.stack(_planes(flat("pa_keys"))))
+        self.pa_ptrs = jnp.asarray(flat("pa_ptrs").astype(np.int32))
+        self.bt_keys = jnp.asarray(np.stack(_planes(flat("bt_keys"))))
+        self.bt_ptrs = jnp.asarray(flat("bt_ptrs").astype(np.int32))
+        lkh, lkl = _planes(flat("leaf_keys"))
+        lph, lpl = _planes(flat("leaf_pay"))
+        self.leaf_pack = jnp.asarray(
+            np.stack([lkh, lkl, lph, lpl], axis=1))       # (R, 4, C)
+
+        if stacked:
+            meta = np.asarray(arrs["meta"]).T.astype(np.int32)    # (2, S)
+            llm = np.stack(_planes(np.asarray(arrs["last_leaf_min"])))
+            raw = np.asarray(arrs["bounds"])
+            nb = max(_MIN_BOUNDS, int(raw.shape[0]))
+            pad = np.full(nb, UMAX, dtype=np.uint64)
+            pad[: raw.shape[0]] = raw
+            bounds = np.stack(_planes(pad))
+        else:
+            meta = np.asarray(arrs["meta"]).reshape(2, 1).astype(np.int32)
+            llm = np.stack(_planes(
+                np.asarray(arrs["last_leaf_min"]).reshape(1)))
+            bounds = np.stack(_planes(np.full(1, UMAX, dtype=np.uint64)))
+        self.meta = jnp.asarray(meta)
+        self.llm = jnp.asarray(llm)
+        self.bounds = jnp.asarray(bounds)
+        self.geom = tuning.PoolGeometry.from_device_arrays(arrs)
+
+    def pool_args(self) -> tuple:
+        return (self.slots_i32, self.slot_key, self.node_i32, self.node_f64,
+                self.pa_keys, self.pa_ptrs, self.bt_keys, self.bt_ptrs,
+                self.leaf_pack, self.meta, self.llm, self.bounds)
+
+
+class OverlayOperands:
+    def __init__(self, ovr: dict):
+        pack = np.asarray(ovr["ov_pack"])
+        kh, kl = _planes(pack[0])
+        ph, plo = _planes(pack[1])
+        self.ov_u32 = jnp.asarray(np.stack([kh, kl, ph, plo]))
+        self.ov_tomb = jnp.asarray(
+            (pack[2] != 0).astype(np.int32).reshape(1, -1))
+        self.cap = int(pack.shape[1])
+
+
+_EMPTY_OVERLAY = None  # lazily built (4,1)/(1,1) placeholder operands
+
+
+def _empty_overlay_args() -> tuple:
+    global _EMPTY_OVERLAY
+    if _EMPTY_OVERLAY is None:
+        _EMPTY_OVERLAY = (jnp.zeros((4, 1), jnp.uint32),
+                          jnp.zeros((1, 1), jnp.int32))
+    return _EMPTY_OVERLAY
+
+
+# snapshot-dict id (+ member-array ids) -> prepared operands; dicts pinned
+_FP_FIELDS = _DEVICE_FIELDS + ["meta", "last_leaf_min", "bounds"]
+_OPERANDS: "OrderedDict[int, tuple]" = OrderedDict()
+_OV_OPERANDS: "OrderedDict[int, tuple]" = OrderedDict()
+_CACHE_LIMIT = 16
+
+
+def clear_operand_cache() -> None:
+    _OPERANDS.clear()
+    _OV_OPERANDS.clear()
+
+
+def _cached(cache: OrderedDict, src: dict, fingerprint: tuple, build):
+    ent = cache.get(id(src))
+    if ent is not None and ent[0] is src and ent[1] == fingerprint:
+        return ent[2]
+    ops = build(src)
+    cache[id(src)] = (src, fingerprint, ops)
+    while len(cache) > _CACHE_LIMIT:
+        cache.popitem(last=False)
+    return ops
+
+
+def _operands(arrs: dict) -> FusedOperands:
+    fp = tuple(id(arrs[f]) for f in _FP_FIELDS if f in arrs)
+    return _cached(_OPERANDS, arrs, fp, FusedOperands)
+
+
+def _overlay_operands(ovr: dict) -> OverlayOperands:
+    return _cached(_OV_OPERANDS, ovr, (id(ovr["ov_pack"]),), OverlayOperands)
+
+
+# ------------------------------------------------------------------ execution
+def _pad_tiles(q, qb: int):
+    """u64 queries -> (T, qb) u32 planes, u64-max padded to a tile multiple
+    (the same never-matching sentinel the engines' ``pad_queries`` uses)."""
+    q = np.asarray(q).astype(np.uint64)
+    Q = q.shape[0]
+    T = max(-(-Q // qb), 1)
+    qp = np.full(T * qb, UMAX, dtype=np.uint64)
+    qp[:Q] = q
+    hi, lo = _planes(qp)
+    return (jnp.asarray(hi.reshape(T, qb)), jnp.asarray(lo.reshape(T, qb)),
+            Q, T)
+
+
+def _run(arrs: dict, ovr: dict | None, q, height: int,
+         interpret, strategy: tuning.TileStrategy | None):
+    interpret = _resolve_interpret(interpret)
+    ops = _operands(arrs)
+    if ovr is not None:
+        ovo = _overlay_operands(ovr)
+        ov_args, ov_cap, has_ov = (ovo.ov_u32, ovo.ov_tomb), ovo.cap, True
+    else:
+        ov_args, ov_cap, has_ov = _empty_overlay_args(), 1, False
+    geom = (ops.geom if not has_ov else
+            tuning.PoolGeometry.from_device_arrays(arrs, ovr))
+    st = strategy or tuning.choose_strategy(geom, interpret=interpret)
+    g = ops.geom
+    cfg = KernelConfig(
+        num_shards=g.num_shards, slot_pool=g.slot_pool,
+        node_pool=g.node_pool, pa_pool=g.pa_pool, pa_cap=g.pa_cap,
+        bt_pool=g.bt_pool, bt_cap=g.bt_cap, leaf_pool=g.leaf_pool,
+        leaf_cap=g.leaf_cap, bounds_len=int(ops.bounds.shape[1]),
+        overlay_cap=ov_cap, qb=st.qb, height=int(height),
+        stale_steps=STALE_STEPS, leaf_resident=(st.leaf == "persistent"),
+        gather=st.gather, sharded=ops.sharded, has_overlay=has_ov)
+    qh, ql, Q, T = _pad_tiles(q, st.qb)
+    tile_starts = jnp.asarray(np.arange(T, dtype=np.int32))
+    ph, plo, fnd, leaf, sid = fused_lookup_planes(
+        cfg, tile_starts, qh, ql, *ops.pool_args(), *ov_args,
+        interpret=interpret)
+    pay = ((ph.reshape(-1)[:Q].astype(jnp.uint64) << 32)
+           | plo.reshape(-1)[:Q].astype(jnp.uint64))
+    found = fnd.reshape(-1)[:Q].astype(bool)
+    leaf = leaf.reshape(-1)[:Q]
+    sid = sid.reshape(-1)[:Q]
+    return pay, found, leaf, sid, g
+
+
+# --------------------------------------------------------------- entry points
+def fused_lookup_batch(arrs: dict, q, height: int = 3, *,
+                       interpret=None, strategy=None):
+    """Fused-kernel twin of ``lookup_batch`` (pay, found, leaf_row)."""
+    pay, found, leaf, _, _ = _run(arrs, None, q, height, interpret, strategy)
+    return pay, found, leaf
+
+
+def fused_lookup_batch_overlay(arrs: dict, ovr: dict, q, height: int = 3, *,
+                               interpret=None, strategy=None):
+    """Fused-kernel twin of ``lookup_batch_overlay``."""
+    pay, found, leaf, _, _ = _run(arrs, ovr, q, height, interpret, strategy)
+    return pay, found, leaf
+
+
+def fused_lookup_batch_sharded(stk: dict, q, height: int = 3, *,
+                               qcap=None, interpret=None, strategy=None):
+    """Fused-kernel twin of ``lookup_batch_sharded`` (pay, found, global
+    leaf row, shard id).  ``qcap`` is accepted for signature compatibility;
+    lane packing is a vmap artifact the fused route does not need."""
+    del qcap
+    pay, found, leaf, sid, g = _run(stk, None, q, height, interpret, strategy)
+    return pay, found, sid * g.leaf_pool + leaf, sid
+
+
+def fused_lookup_batch_sharded_overlay(stk: dict, ovr: dict, q,
+                                       height: int = 3, *, qcap=None,
+                                       interpret=None, strategy=None):
+    """Fused-kernel twin of ``lookup_batch_sharded_overlay``."""
+    del qcap
+    pay, found, leaf, sid, g = _run(stk, ovr, q, height, interpret, strategy)
+    return pay, found, sid * g.leaf_pool + leaf
+
+
+# ------------------------------------------------------------------- autotune
+def autotune_strategy(arrs: dict, q, *, ovr: dict | None = None,
+                      height: int = 3, interpret=None,
+                      reps: int = 3) -> tuning.TileStrategy:
+    """Measured tile-size sweep for this mirror's geometry (cached per
+    geometry in :mod:`tuning`)."""
+    interpret = _resolve_interpret(interpret)
+    geom = tuning.PoolGeometry.from_device_arrays(arrs, ovr)
+
+    def bench(st: tuning.TileStrategy) -> float:
+        def once():
+            jax.block_until_ready(
+                _run(arrs, ovr, q, height, interpret, st)[0])
+        once()                       # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            once()
+        return (time.perf_counter() - t0) / reps
+
+    return tuning.autotune(geom, bench, interpret=interpret)

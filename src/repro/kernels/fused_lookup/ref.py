@@ -1,0 +1,21 @@
+"""jnp correctness oracle for the fused kernel.
+
+The fused kernel's contract is BIT-IDENTICAL output to the jnp read path of
+``core.lookup`` — so the oracle IS that path, re-exported under the names
+the parity suite uses.  Keeping the aliases here (rather than re-implementing
+a third traversal) guarantees the oracle can never drift from what the
+serving engines actually execute on the jnp backend.
+"""
+from __future__ import annotations
+
+from ...core.lookup import (lookup_batch, lookup_batch_overlay,
+                            lookup_batch_sharded,
+                            lookup_batch_sharded_overlay)
+
+lookup_batch_ref = lookup_batch
+lookup_batch_overlay_ref = lookup_batch_overlay
+lookup_batch_sharded_ref = lookup_batch_sharded
+lookup_batch_sharded_overlay_ref = lookup_batch_sharded_overlay
+
+__all__ = ["lookup_batch_ref", "lookup_batch_overlay_ref",
+           "lookup_batch_sharded_ref", "lookup_batch_sharded_overlay_ref"]

@@ -295,12 +295,16 @@ class IndexEngine(BaseIndexEngine):
     """Batching engine for mixed get/insert/delete/scan over one index."""
 
     def __init__(self, idx: Aulid, *, gamma: float = 0.05,
-                 auto_compact: bool = True):
+                 auto_compact: bool = True, backend: str = "auto"):
         # imported lazily-adjacent (module import enables jax x64 — keep the
         # engine importable before the host index is even built)
-        from ..core.lookup import lookup_batch_overlay, scan_batch_overlay
+        from ..core.lookup import (lookup_backend_fns, resolve_read_backend,
+                                   scan_batch_overlay)
         super().__init__()
-        self._lookup = lookup_batch_overlay
+        # point lookups dispatch by backend (jnp gathers vs fused Pallas
+        # kernel — DESIGN.md §10); scans always run the jnp path
+        self.read_backend = resolve_read_backend(backend)
+        self._lookup = lookup_backend_fns(backend)
         self._scan = scan_batch_overlay
         self.gamma = gamma
         self.auto_compact = auto_compact
@@ -369,6 +373,7 @@ class IndexEngine(BaseIndexEngine):
     def stats(self) -> dict:
         return {
             **super().stats(),
+            "read_backend": self.read_backend,
             "overlay_len": len(self.overlay),
             "compactions": self.compactions,
             "mirror_refreshes": self.di.refreshes,

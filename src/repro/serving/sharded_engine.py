@@ -37,13 +37,16 @@ class ShardedIndexEngine(BaseIndexEngine):
     """Batching engine for mixed get/insert/delete/scan over range shards."""
 
     def __init__(self, part: RangePartition, *, gamma: float = 0.05,
-                 auto_compact: bool = True):
-        from ..core.lookup import (lookup_batch_sharded_overlay,
+                 auto_compact: bool = True, backend: str = "auto"):
+        from ..core.lookup import (lookup_backend_fns, resolve_read_backend,
                                    scan_batch_sharded_overlay,
                                    stacked_device_arrays,
                                    update_stacked_shard)
         super().__init__()
-        self._lookup = lookup_batch_sharded_overlay
+        # point lookups dispatch by backend (vmapped jnp vs the fused Pallas
+        # kernel's in-kernel route — DESIGN.md §10); scans stay jnp
+        self.read_backend = resolve_read_backend(backend)
+        self._lookup = lookup_backend_fns(backend, sharded=True)
         self._scan = scan_batch_sharded_overlay
         self._stacked_device_arrays = stacked_device_arrays
         self._update_stacked_shard = update_stacked_shard
@@ -149,6 +152,7 @@ class ShardedIndexEngine(BaseIndexEngine):
     def stats(self) -> dict:
         return {
             **super().stats(),
+            "read_backend": self.read_backend,
             "num_shards": self.num_shards,
             "overlay_len": sum(len(sh.overlay) for sh in self.shards),
             "compactions": self.compactions,
