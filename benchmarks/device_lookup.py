@@ -83,6 +83,7 @@ def run(scale: str = "small", batch: int = 4_096) -> list[dict]:
                                                count_rounds=True)
         assert foundk.all()
 
+        dma_rows = rows_dma_per_query(geom, strategy, batch)
         rows.append({
             "dataset": dataset,
             "host_qps": round(host_qps),
@@ -91,8 +92,11 @@ def run(scale: str = "small", batch: int = 4_096) -> list[dict]:
             "fused_speedup_vs_jnp": fused_speedup,
             "strategy": strategy.describe(),
             "kernel_block_rounds": rounds,
-            "rows_dma_per_query": round(
-                rows_dma_per_query(geom, strategy, batch), 2),
+            "rows_dma_per_query": round(dma_rows, 2),
+            # a leaf row is leaf_cap (key, payload) u64 pairs — the 4 KB
+            # block of paper §3.3.2 at the default geometry; this feeds the
+            # fused-lookup entry of benchmarks/roofline.py
+            "dma_bytes_per_query": round(dma_rows * geom.leaf_cap * 16, 1),
             "speedup_device_vs_host": round(dev_qps / host_qps, 1),
         })
     save_results("device_lookup", rows, {

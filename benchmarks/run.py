@@ -22,42 +22,68 @@ MODULES = ["workloads", "bulkload", "tail_latency", "scalability",
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+# Registry of `BENCH_serving.json` sections: section name -> the benchmark
+# module that emits it.  Every written section carries its own
+# {"emitter", "generated"} stamp; a carried-over section is PRUNED when its
+# recorded emitter no longer matches this registry or is no longer in
+# MODULES — previously, sections from deleted/renamed benchmarks survived
+# in the snapshot forever, presenting dead numbers as current.
+SERVING_SECTIONS = {
+    "engines": "sharded_serving",
+    "compaction_storm": "sharded_serving",
+    "device_lookup": "device_lookup",
+    "mixed_serving": "mixed_serving",
+}
+
+
 def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
     """Collate the serving benchmarks' saved rows into one machine-readable
     `BENCH_serving.json` at the repo root: per-engine throughput, p99 step
-    latency, compaction counts (monolithic vs sharded), and the device read
-    path (jnp vs fused Pallas kernel, per-geometry tuning choice), so the
-    serving perf trajectory accumulates across PRs (ROADMAP open items).
+    latency, compaction counts (monolithic vs sharded), the compaction-storm
+    flatness numbers (sync vs double-buffered, DESIGN.md §11), and the
+    device read path (jnp vs fused Pallas kernel, per-geometry tuning
+    choice), so the serving perf trajectory accumulates across PRs.
 
     Sections merge, never fork: only the sections whose source module ran
-    fresh in THIS invocation (``fresh``) are rebuilt — the others are
-    carried over from the existing snapshot with their own `generated`
-    stamps intact, so leftover rows from an old run are never re-stamped
-    as current."""
+    fresh in THIS invocation (``fresh``) are rebuilt — the others carry over
+    with their own per-section `emitter`/`generated` stamps intact, so
+    leftover rows from an old run are never re-stamped as current, and
+    sections orphaned by a deleted or renamed benchmark (or lacking a stamp
+    entirely, e.g. from the pre-stamp file format) are dropped."""
     from .common import RESULTS_DIR
     out = REPO_ROOT / "BENCH_serving.json"
-    doc = {"benchmark": "serving", "engines": {}, "device_lookup": {},
-           "meta": {}}
+    sections: dict[str, dict] = {}
     if out.exists():
         try:
             prev = json.loads(out.read_text())
-            for key in ("engines", "device_lookup", "meta"):
-                doc[key] = prev.get(key, doc[key])
         except ValueError:
-            pass
+            prev = {}
+        for name, sec in prev.get("sections", {}).items():
+            if not isinstance(sec, dict):
+                continue
+            emitter = sec.get("emitter")
+            if SERVING_SECTIONS.get(name) == emitter and emitter in MODULES:
+                sections[name] = sec
     if fresh is None:
-        fresh = {"sharded_serving", "mixed_serving", "device_lookup"}
+        fresh = set(SERVING_SECTIONS.values())
     stamp = time.strftime("%Y-%m-%d %H:%M:%S")
     changed = False
 
-    sharded = RESULTS_DIR / "sharded_serving.json"
-    if "sharded_serving" in fresh and sharded.exists():
-        data = json.loads(sharded.read_text())
-        doc["meta"]["sharded_serving"] = {**data.get("meta", {}),
-                                          "generated": stamp}
-        doc["engines"] = {}
-        for row in data["rows"]:
-            doc["engines"][row["engine"]] = {
+    def load(mod: str):
+        p = RESULTS_DIR / f"{mod}.json"
+        if mod not in fresh or not p.exists():
+            return None
+        return json.loads(p.read_text())
+
+    data = load("sharded_serving")
+    if data is not None:
+        rows = data.get("rows", [])
+        hot = [r for r in rows if r.get("scenario", "hot_shard") == "hot_shard"]
+        storm = [r for r in rows if r.get("scenario") == "storm"]
+        sections["engines"] = {
+            "emitter": "sharded_serving", "generated": stamp,
+            "meta": data.get("meta", {}),
+            "engines": {row["engine"]: {
                 "shards": row.get("shards", 1),
                 "throughput_ops_s": row.get("throughput_ops_s"),
                 "p99_step_ms": row.get("p99_step_ms"),
@@ -66,33 +92,48 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
                 "mirror_full_builds": row.get("mirror_full_builds"),
                 "mirror_refreshes": row.get("mirror_refreshes"),
                 "p99_speedup_vs_monolithic": row.get("p99_speedup"),
+            } for row in hot},
+        }
+        if storm:
+            sections["compaction_storm"] = {
+                "emitter": "sharded_serving", "generated": stamp,
+                "p99_flatness_gate":
+                    data.get("meta", {}).get("storm_p99_flatness"),
+                "engines": {row["engine"]: {
+                    "steady_p99_ms": row.get("steady_p99_ms"),
+                    "storm_p99_ms": row.get("storm_p99_ms"),
+                    "storm_ratio": row.get("storm_ratio"),
+                    "storm_steps": row.get("storm_steps"),
+                    "compactions": row.get("compactions"),
+                    "swaps": row.get("swaps"),
+                    "full_restacks": row.get("full_restacks"),
+                } for row in storm},
             }
         changed = True
-    mixed = RESULTS_DIR / "mixed_serving.json"
-    if "mixed_serving" in fresh and mixed.exists():
-        doc["meta"]["mixed_serving"] = {
-            **json.loads(mixed.read_text()).get("meta", {}),
-            "generated": stamp}
+    data = load("mixed_serving")
+    if data is not None:
+        sections["mixed_serving"] = {"emitter": "mixed_serving",
+                                     "generated": stamp,
+                                     "meta": data.get("meta", {})}
         changed = True
-    device = RESULTS_DIR / "device_lookup.json"
-    if "device_lookup" in fresh and device.exists():
-        data = json.loads(device.read_text())
-        doc["meta"]["device_lookup"] = {**data.get("meta", {}),
-                                        "generated": stamp}
-        doc["device_lookup"] = {}
-        for row in data["rows"]:
-            doc["device_lookup"][row["dataset"]] = {
+    data = load("device_lookup")
+    if data is not None:
+        sections["device_lookup"] = {
+            "emitter": "device_lookup", "generated": stamp,
+            "meta": data.get("meta", {}),
+            "datasets": {row["dataset"]: {
                 "jnp_batch_qps": row.get("device_batch_qps"),
                 "fused_kernel_qps": row.get("fused_kernel_qps"),
                 "fused_speedup_vs_jnp": row.get("fused_speedup_vs_jnp"),
                 "strategy": row.get("strategy"),
                 "rows_dma_per_query": row.get("rows_dma_per_query"),
                 "kernel_block_rounds": row.get("kernel_block_rounds"),
-            }
+            } for row in data.get("rows", [])},
+        }
         changed = True
-    if not changed or not (doc["engines"] or doc["device_lookup"]):
+    if not changed or not sections:
         return None
-    doc["generated"] = stamp
+    doc = {"benchmark": "serving", "generated": stamp, "sections": sections}
     out.write_text(json.dumps(doc, indent=1))
     return out
 
@@ -119,7 +160,7 @@ def main():
     # rebuild only the sections whose source module ran fresh in THIS
     # invocation — re-stamping leftover rows from an old run would present
     # stale numbers as current (other sections carry over unchanged)
-    fresh = {m for m in ("sharded_serving", "mixed_serving", "device_lookup")
+    fresh = {m for m in set(SERVING_SECTIONS.values())
              if m in mods and m not in failures}
     if fresh:
         path = emit_bench_serving(fresh)

@@ -20,8 +20,25 @@ Acceptance gates (asserted inline):
   epoch (journal_epoch / full_builds / refreshes unchanged) for the whole
   run, and only the hot shard compacts;
 * both engines return identical results on a final probe batch.
+
+The **compaction-storm scenario** (ISSUE 7, DESIGN.md §11) is the adversarial
+complement: fresh keys spread *uniformly*, so every shard crosses its gamma
+threshold in the SAME step and folds with leaf splits (SMO full mirror
+rebuilds) — the worst case for on-path maintenance.  The synchronous engine
+does all S rebuilds + device installs inside that step; the double-buffered
+engine freezes the overlays and keeps serving while the builds run in the
+background, swapping epochs at later step boundaries.  Gates: storm-window
+p99 of the double-buffered engine within ``STORM_P99_FLATNESS`` of its own
+steady-state p99, and sync-vs-async request-for-request equivalence across
+every step of the trace.  The sync engine's storm ratio is reported
+alongside: this PR's in-place (donated) slice install removed the
+device-side stall for BOTH modes, so at small scales the sync spike is
+host-rebuild-bound and modest; it grows with shard size while the
+double-buffered path stays flat by construction.
 """
 from __future__ import annotations
+
+import gc
 
 import numpy as np
 
@@ -39,6 +56,14 @@ WRITES_PER_STEP = 128
 GETS_PER_STEP = 512
 SCANS_PER_STEP = 16
 SCAN_COUNT = 64
+
+# ---- compaction-storm scenario knobs
+STORM_STEPS = 96
+STORM_WARMUP = 12          # covers the first full storm cycle's compiles
+STORM_WRITES_PER_STEP = 160   # uniform: ~20/shard/step -> all-shard storms
+STORM_GETS_PER_STEP = 1024    # read-heavy serving batch: the p99 the storm
+STORM_SCANS_PER_STEP = 32     # must not disturb is dominated by real traffic
+STORM_P99_FLATNESS = 1.5   # acceptance: async storm p99 <= 1.5x steady p99
 
 
 def _trace(keys: np.ndarray, bounds: np.ndarray, rng: np.random.Generator):
@@ -76,6 +101,133 @@ def _drive(eng, steps) -> dict:
             "p99_step_s": float(np.percentile(lat, 99)),
             "mean_step_s": float(lat.mean()),
             "throughput_ops_s": ops_per_step / float(lat.mean())}
+
+
+def _storm_trace(keys: np.ndarray, rng: np.random.Generator):
+    """Fresh-key writes drawn uniformly over the WHOLE key range ->
+    synchronized all-shard gamma crossings (compaction storms) whose folds
+    split leaves and force SMO mirror rebuilds on every shard at once, plus
+    a read-heavy get/scan mix."""
+    lo, hi = int(keys.min()), int(keys.max())
+    steps = []
+    for i in range(STORM_STEPS):
+        ins = rng.integers(lo, hi, STORM_WRITES_PER_STEP, dtype=np.uint64)
+        gets = rng.choice(keys, STORM_GETS_PER_STEP).astype(np.uint64)
+        scans = rng.choice(keys, STORM_SCANS_PER_STEP).astype(np.uint64)
+        steps.append((ins, gets, scans, i))
+    return steps
+
+
+def _drive_storm(eng: ShardedIndexEngine, steps):
+    """Drive the storm trace, recording every request's result (for the
+    request-for-request equivalence gate) and tagging each step that did any
+    mirror maintenance (compact / freeze / swap / restack) via counter
+    deltas — the untagged remainder is the steady-state baseline.  The
+    collector is paused for the timed region: fresh-key storms allocate
+    heavily and a gen-2 GC pause is the same order as a whole step, which
+    would poison the p99-vs-p99 ratio with scheduling noise."""
+    results, active = [], []
+    gc.collect()
+    gc.disable()
+    try:
+        for ins, gets, scans, step_i in steps:
+            reqs = []
+            for k in ins:
+                reqs.append(eng.insert(int(k), (int(k) + step_i) % 100_000))
+            for k in gets:
+                reqs.append(eng.get(int(k)))
+            for k in scans:
+                reqs.append(eng.scan(int(k), SCAN_COUNT))
+            before = (eng.compactions, eng.swaps, eng.restacks)
+            eng.step()
+            active.append((eng.compactions, eng.swaps, eng.restacks)
+                          != before)
+            results.append([(r.op, r.key, r.result) for r in reqs])
+        eng.drain_compactions()
+    finally:
+        gc.enable()
+    return results, np.asarray(active, dtype=bool)
+
+
+def _storm_stats(eng: ShardedIndexEngine, active: np.ndarray) -> dict:
+    lat = np.asarray(eng.step_seconds)[STORM_WARMUP:]
+    act = active[STORM_WARMUP:]
+    assert act.any(), "storm trace produced no post-warmup compaction storms"
+    # a p99 baseline over a handful of steps is just their max — demand
+    # enough steady samples that one noisy step cannot swing the ratio
+    assert (~act).sum() >= 8, (
+        f"only {int((~act).sum())} steady-state steps post-warmup — "
+        "lengthen STORM_STEPS for a usable baseline")
+    steady_p99 = float(np.percentile(lat[~act], 99))
+    storm_p99 = float(np.percentile(lat, 99))
+    return {**eng.stats(),
+            "steady_p99_s": steady_p99,
+            "storm_p99_s": storm_p99,
+            "storm_ratio": storm_p99 / max(steady_p99, 1e-9),
+            "storm_steps": int(act.sum())}
+
+
+def run_storm(scale: str = "small") -> list[dict]:
+    """Compaction-storm scenario: sync vs double-buffered sharded engine on
+    the identical uniform-write trace (ISSUE 7 acceptance criterion)."""
+    n = SCALE_N[scale]
+    keys = make_dataset("covid", n)
+    pays = payloads_for(keys)
+    steps = _storm_trace(keys, np.random.default_rng(7))
+
+    engines = {}
+    for mode, async_compact in (("sharded-sync", False),
+                                ("sharded-async", True)):
+        part = partition_bulkload(keys, pays, NUM_SHARDS)
+        eng = ShardedIndexEngine(part, gamma=GAMMA,
+                                 async_compact=async_compact)
+        wall, (results, active) = timed(
+            lambda e=eng: _drive_storm(e, steps), warmup=0, reps=1)
+        engines[mode] = (eng, results, active, wall)
+
+    # ---- gate 1: request-for-request equivalence across the whole trace
+    res_sync = engines["sharded-sync"][1]
+    res_async = engines["sharded-async"][1]
+    for step_i, (rs, ra) in enumerate(zip(res_sync, res_async)):
+        assert rs == ra, f"sync/async diverged at step {step_i}"
+
+    rows = []
+    for mode, (eng, _, active, wall) in engines.items():
+        st = _storm_stats(eng, active)
+        rows.append({
+            "engine": mode,
+            "scenario": "storm",
+            "shards": eng.num_shards,
+            "steady_p99_ms": round(1e3 * st["steady_p99_s"], 2),
+            "storm_p99_ms": round(1e3 * st["storm_p99_s"], 2),
+            "storm_ratio": round(st["storm_ratio"], 2),
+            "storm_steps": st["storm_steps"],
+            "compactions": st["compactions"],
+            "swaps": st["swaps"],
+            "full_restacks": st["full_restacks"],
+            "wall_s": round(wall, 1),
+        })
+
+    by = {r["engine"]: r for r in rows}
+    print_table("Compaction storm: all shards cross gamma in the same step "
+                "(p99 vs own steady state)",
+                rows, ["engine", "storm_p99_ms", "steady_p99_ms",
+                       "storm_ratio", "storm_steps", "compactions", "swaps",
+                       "full_restacks"])
+    print(f"\nasync storm p99 {by['sharded-async']['storm_ratio']:.2f}x its "
+          f"steady p99 (gate: <= {STORM_P99_FLATNESS}x); sync ratio "
+          f"{by['sharded-sync']['storm_ratio']:.2f}x for comparison")
+
+    # ---- gate 2: double-buffering flattens the storm
+    assert by["sharded-async"]["storm_ratio"] <= STORM_P99_FLATNESS, (
+        "acceptance criterion: double-buffered storm p99 within "
+        f"{STORM_P99_FLATNESS}x of steady-state p99")
+    # sanity: storms actually compacted every shard at least once
+    eng_async = engines["sharded-async"][0]
+    assert all(sh.compactions >= 1 for sh in eng_async.shards), \
+        "storm trace failed to compact every shard"
+    assert by["sharded-async"]["swaps"] >= eng_async.num_shards
+    return rows
 
 
 def run(scale: str = "small") -> list[dict]:
@@ -126,6 +278,7 @@ def run(scale: str = "small") -> list[dict]:
                           ("sharded", r_shrd, t_shrd)):
         rows.append({
             "engine": name,
+            "scenario": "hot_shard",
             "shards": 1 if name == "monolithic" else shrd.num_shards,
             "p99_step_ms": round(1e3 * r["p99_step_s"], 2),
             "mean_step_ms": round(1e3 * r["mean_step_s"], 2),
@@ -136,13 +289,6 @@ def run(scale: str = "small") -> list[dict]:
             "wall_s": round(wall, 1),
             "p99_speedup": round(speedup, 2) if name == "sharded" else 1.0,
         })
-    save_results("sharded_serving", rows,
-                 {"scale": scale, "num_shards": NUM_SHARDS, "gamma": GAMMA,
-                  "steps": STEPS, "warmup": WARMUP,
-                  "writes_per_step": WRITES_PER_STEP,
-                  "gets_per_step": GETS_PER_STEP,
-                  "scans_per_step": SCANS_PER_STEP,
-                  "scan_count": SCAN_COUNT, "hot_shard": hot})
     print_table("Skewed mixed serving: shard-local vs whole-keyspace "
                 "compaction stalls (p99 step latency)",
                 rows, ["engine", "shards", "p99_step_ms", "mean_step_ms",
@@ -152,6 +298,18 @@ def run(scale: str = "small") -> list[dict]:
           f"(acceptance gate: >= 2x, compaction stalls shard-local)")
     assert speedup >= 2.0, \
         "acceptance criterion: >=2x lower p99 step latency under skew"
+
+    rows += run_storm(scale)
+    save_results("sharded_serving", rows,
+                 {"scale": scale, "num_shards": NUM_SHARDS, "gamma": GAMMA,
+                  "steps": STEPS, "warmup": WARMUP,
+                  "writes_per_step": WRITES_PER_STEP,
+                  "gets_per_step": GETS_PER_STEP,
+                  "scans_per_step": SCANS_PER_STEP,
+                  "scan_count": SCAN_COUNT, "hot_shard": hot,
+                  "storm_steps": STORM_STEPS, "storm_warmup": STORM_WARMUP,
+                  "storm_writes_per_step": STORM_WRITES_PER_STEP,
+                  "storm_p99_flatness": STORM_P99_FLATNESS})
     return rows
 
 

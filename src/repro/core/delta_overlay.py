@@ -26,12 +26,18 @@ Padded capacity grows geometrically so jitted consumers see few shapes.
 """
 from __future__ import annotations
 
+import itertools
 from typing import Iterable, Optional
 
 import numpy as np
 
 UINT64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 MIN_CAPACITY = 64
+
+# process-wide monotonic overlay identity: unlike ``id()``, a uid is never
+# recycled after garbage collection, so (uid, version) pairs are safe cache
+# keys for derived artifacts (merged device packs, operand packs)
+_OVERLAY_UIDS = itertools.count(1)
 
 
 def next_pow2(x: int | float) -> int:
@@ -52,7 +58,8 @@ class DeltaOverlay:
     read path constant for the overlay's whole lifetime (one compile).
     """
 
-    __slots__ = ("_map", "_cache", "_min_cap", "n_upserts", "n_tombstones")
+    __slots__ = ("_map", "_cache", "_min_cap", "n_upserts", "n_tombstones",
+                 "uid", "version")
 
     def __init__(self, min_capacity: int = MIN_CAPACITY) -> None:
         self._map: dict[int, tuple[int, bool]] = {}  # key -> (payload, tomb)
@@ -60,6 +67,8 @@ class DeltaOverlay:
         self._min_cap = max(int(min_capacity), 1)
         self.n_upserts = 0
         self.n_tombstones = 0
+        self.uid = next(_OVERLAY_UIDS)   # never-recycled identity (module doc)
+        self.version = 0                 # bumped on every mutation
 
     @classmethod
     def for_threshold(cls, threshold: float) -> "DeltaOverlay":
@@ -68,10 +77,22 @@ class DeltaOverlay:
         snapshot instead of once per capacity doubling."""
         return cls(min_capacity=max(MIN_CAPACITY, next_pow2(threshold)))
 
+    @property
+    def min_capacity(self) -> int:
+        return self._min_cap
+
+    def spawn_empty(self) -> "DeltaOverlay":
+        """A fresh empty overlay with the same capacity floor — the
+        post-freeze write target of the double-buffered compaction lifecycle
+        (DESIGN.md §11): the frozen overlay keeps serving reads while the
+        spawned one absorbs writes racing the background rebuild."""
+        return DeltaOverlay(min_capacity=self._min_cap)
+
     # ------------------------------------------------------------- mutation
     def record_insert(self, key: int, payload: int) -> None:
         self._map[int(key)] = (int(payload), False)
         self._cache = None
+        self.version += 1
         self.n_upserts += 1
 
     record_update = record_insert
@@ -79,12 +100,14 @@ class DeltaOverlay:
     def record_delete(self, key: int) -> None:
         self._map[int(key)] = (0, True)
         self._cache = None
+        self.version += 1
         self.n_tombstones += 1
 
     def clear(self) -> None:
         """Drop all entries (after a compaction folded them into a snapshot)."""
         self._map.clear()
         self._cache = None
+        self.version += 1
 
     # ---------------------------------------------------------------- reads
     def __len__(self) -> int:
@@ -145,3 +168,26 @@ class DeltaOverlay:
                 tomb[:n] = ut[order]
             self._cache = {"ov_keys": keys, "ov_pay": pays, "ov_tomb": tomb}
         return self._cache
+
+
+def merge_overlays(frozen: Optional["DeltaOverlay"], live: "DeltaOverlay"
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unpadded sorted (keys, payloads, tombstones) of ``frozen`` updated by
+    ``live`` — the read view of a shard whose compaction is in flight
+    (DESIGN.md §11): the frozen overlay's entries (including tombstones that
+    hide old-snapshot keys) stay visible until the epoch swap retires them,
+    while any post-freeze write to the same key wins.
+
+    ``frozen=None`` degrades to the live overlay alone, so pack builders can
+    call this unconditionally."""
+    if frozen is None or not len(frozen):
+        merged = live._map
+    else:
+        merged = {**frozen._map, **live._map}   # live wins per key
+    n = len(merged)
+    keys = np.fromiter(merged.keys(), dtype=np.uint64, count=n)
+    pays = np.fromiter((v[0] for v in merged.values()), dtype=np.uint64,
+                       count=n)
+    tomb = np.fromiter((v[1] for v in merged.values()), dtype=bool, count=n)
+    order = np.argsort(keys)
+    return keys[order], pays[order], tomb[order]

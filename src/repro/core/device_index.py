@@ -292,6 +292,10 @@ class StackedDeviceIndex:
     meta: np.ndarray             # (S, 2) [root_node, last_leaf_row]
     last_leaf_min: np.ndarray    # (S,) u64
     leaf_next_chain: np.ndarray  # (S*Lmax,) global rows, crosses shards
+    # pool epoch (DESIGN.md §11): bumped on every shard install / full
+    # re-stack, so consumers can tell "same object, new contents" apart —
+    # the double-buffered engines swap epochs atomically between steps
+    epoch: int = 0
 
     @property
     def num_shards(self) -> int:
@@ -419,9 +423,45 @@ def restack_shard(sdi: StackedDeviceIndex, s: int,
         dst[s] = _pad_to(getattr(di, f), dst.shape[1:], fill)
     sdi.meta[s] = (di.root_node, di.last_leaf_row)
     sdi.last_leaf_min[s] = di.last_leaf_min
+    sdi.epoch += 1
     if rechain:
         rechain_stacked(sdi)
     return True
+
+
+def pad_shard_slices(sdi: StackedDeviceIndex,
+                     di: DeviceIndex) -> "dict[str, np.ndarray] | None":
+    """Pad one (refreshed) shard mirror to ``sdi``'s stacked pool shapes
+    WITHOUT touching ``sdi`` — the build stage of the double-buffered
+    compaction lifecycle (DESIGN.md §11), safe to run on a background thread
+    while the stacked pools keep serving the old epoch.  Returns the padded
+    per-field slices (plus the shard's meta row), or None when any pool
+    outgrew its padded capacity (the caller must then full-re-stack at swap
+    time)."""
+    for f, _ in _STACK_2D + _STACK_3D:
+        if any(a > b for a, b in zip(getattr(di, f).shape,
+                                     getattr(sdi, f).shape[1:])):
+            return None
+    out = {f: _pad_to(getattr(di, f), getattr(sdi, f).shape[1:], fill)
+           for f, fill in _STACK_2D + _STACK_3D}
+    out["meta"] = np.array([di.root_node, di.last_leaf_row], dtype=np.int32)
+    out["last_leaf_min"] = np.uint64(di.last_leaf_min)
+    return out
+
+
+def install_shard_slices(sdi: StackedDeviceIndex, s: int, di: DeviceIndex,
+                         slices: dict) -> None:
+    """Install slices prepared by :func:`pad_shard_slices` for shard ``s``
+    into the stacked pools — the swap stage of the lifecycle, run between
+    engine steps.  Shapes must match ``sdi`` (the caller re-validates when a
+    concurrent full re-stack may have changed them).  No rechain: callers
+    installing several shards call :func:`rechain_stacked` once."""
+    sdi.dis[s] = di
+    for f, _ in _STACK_2D + _STACK_3D:
+        getattr(sdi, f)[s] = slices[f]
+    sdi.meta[s] = slices["meta"]
+    sdi.last_leaf_min[s] = slices["last_leaf_min"]
+    sdi.epoch += 1
 
 
 def refresh_device_index(idx: Aulid, di: DeviceIndex) -> DeviceIndex:

@@ -15,6 +15,7 @@ comparison variant is implemented natively in ``repro.kernels.leaf_search``.
 from __future__ import annotations
 
 import functools
+import itertools
 
 import jax
 import numpy as np
@@ -23,12 +24,26 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from .delta_overlay import DeltaOverlay  # noqa: E402
+from .delta_overlay import (DeltaOverlay, UINT64_MAX, merge_overlays,  # noqa: E402
+                            next_pow2)
 from .device_index import _STACK_2D, _STACK_3D, DeviceIndex  # noqa: E402
 
 # the mirror pools every read path gathers from — one list, derived from the
 # stacking tables so a new DeviceIndex pool can't silently miss a consumer
 _DEVICE_FIELDS = [f for f, _ in _STACK_2D + _STACK_3D]
+
+# Monotonic snapshot tokens (DESIGN.md §10 caveat, §11): every operand dict a
+# mutation path returns carries a fresh process-unique token under
+# "snap_token" / "ov_token".  Unlike ``id()``, a token is never recycled
+# after garbage collection, so downstream caches (the fused kernel's operand
+# packs) key on it safely.  The token rides the dict as a plain int leaf —
+# jitted consumers treat it as one scalar operand and never recompile on it.
+_SNAP_TOKENS = itertools.count(1)
+
+
+def new_snap_token() -> int:
+    """Issue a process-unique snapshot token (see module comment above)."""
+    return next(_SNAP_TOKENS)
 
 
 def device_arrays(di: DeviceIndex) -> dict[str, jnp.ndarray]:
@@ -36,6 +51,7 @@ def device_arrays(di: DeviceIndex) -> dict[str, jnp.ndarray]:
     d = {f: jnp.asarray(getattr(di, f)) for f in _DEVICE_FIELDS}
     d["meta"] = jnp.array([di.root_node, di.last_leaf_row], dtype=jnp.int32)
     d["last_leaf_min"] = jnp.asarray(di.last_leaf_min)
+    d["snap_token"] = new_snap_token()
     return d
 
 
@@ -198,7 +214,32 @@ def overlay_arrays(ov: DeltaOverlay) -> dict[str, jnp.ndarray]:
     pack[0] = a["ov_keys"]
     pack[1] = a["ov_pay"]
     pack[2] = a["ov_tomb"]
-    return {"ov_pack": jnp.asarray(pack)}
+    return {"ov_pack": jnp.asarray(pack), "ov_token": new_snap_token()}
+
+
+def overlay_arrays_merged(frozen: DeltaOverlay | None, live: DeltaOverlay
+                          ) -> dict:
+    """Packed (3, cap) device pack of ``frozen`` updated by ``live`` — the
+    overlay view served while a compaction is in flight (DESIGN.md §11).
+
+    Capacity is bucketed at >= 2x the live overlay's floor: the frozen side
+    holds at most ~threshold entries (it froze when it crossed gamma·n) and
+    the live side is bounded the same way, so one stable power of two covers
+    the whole in-flight window — the jitted merge path keeps one shape across
+    freeze and swap instead of recompiling per fill level.
+
+    ``n_live`` rides the dict as a host-side int (the merged occupancy — the
+    engines' ``ov_bound``); jitted consumers see it as one unused scalar."""
+    keys, pays, tomb = merge_overlays(frozen, live)
+    n = keys.shape[0]
+    cap = next_pow2(max(n, 2 * live.min_capacity))
+    pack = np.zeros((3, cap), dtype=np.uint64)
+    pack[0] = UINT64_MAX
+    pack[0, :n] = keys
+    pack[1, :n] = pays
+    pack[2, :n] = tomb
+    return {"ov_pack": jnp.asarray(pack), "ov_token": new_snap_token(),
+            "n_live": int(n)}
 
 
 def update_leaf_rows(arrs: dict, di: DeviceIndex) -> dict:
@@ -223,6 +264,7 @@ def update_leaf_rows(arrs: dict, di: DeviceIndex) -> dict:
         arrs["leaf_count"] = arrs["leaf_count"].at[r].set(
             jnp.asarray(di.leaf_count[rows]))
         arrs["last_leaf_min"] = jnp.asarray(di.last_leaf_min)
+        arrs["snap_token"] = new_snap_token()
     return arrs
 
 
@@ -338,26 +380,53 @@ def stacked_device_arrays(sdi) -> dict[str, jnp.ndarray]:
     d["last_leaf_min"] = jnp.asarray(sdi.last_leaf_min)
     d["bounds"] = jnp.asarray(sdi.bounds)
     d["leaf_next_chain"] = jnp.asarray(sdi.leaf_next_chain)
+    d["snap_token"] = new_snap_token()
     return d
 
 
-def update_stacked_shard(stk: dict, sdi, shards: list[int]) -> dict:
+@functools.partial(jax.jit, donate_argnames=("pools",))
+def _install_shard_rows(pools: dict, s: jnp.ndarray, rows: dict) -> dict:
+    """Write one shard's mirror slices into the stacked pools in place: the
+    pools are donated, so XLA reuses their buffers instead of copying them
+    (O(slice) per install, not O(pool)).  ``s`` is traced — one compile
+    serves every shard index."""
+    return {f: pools[f].at[s].set(rows[f]) for f in pools}
+
+
+def update_stacked_shard(stk: dict, sdi, shards: list[int],
+                         dev_slices: dict | None = None) -> dict:
     """Patch the device copy of the stacked pools after ``restack_shard``
     refreshed the given shards: only those shards' slices are re-uploaded
     (plus the small per-shard metadata vectors and the successor chain) —
     cold shards' device slices are untouched, keeping the device cost of a
-    shard-local compaction proportional to the hot shard."""
+    shard-local compaction proportional to the hot shard.
+
+    ``dev_slices`` maps shard id -> per-field device arrays already shaped to
+    the stacked slice (``pad_shard_slices`` output, ``jax.device_put`` by a
+    background build — DESIGN.md §11).  Shards present there skip the host
+    transfer entirely: the epoch swap pays only the on-device scatter."""
+    assert shards, "update_stacked_shard needs at least one changed shard"
     stk = dict(stk)
-    # one batched scatter per field: each eager .at[].set materializes a new
-    # array the size of the WHOLE stacked pool, so per-shard updates would
-    # cost O(pool x len(shards)) instead of O(pool)
-    idx = jnp.asarray(np.asarray(shards, dtype=np.int32))
-    sel = np.asarray(shards, dtype=np.intp)
-    for f in _DEVICE_FIELDS:
-        stk[f] = stk[f].at[idx].set(jnp.asarray(getattr(sdi, f)[sel]))
+    # one donated jit call per shard writes that shard's slices into the
+    # pools IN PLACE: cost O(slice), not O(pool) — an eager .at[].set would
+    # materialize a fresh copy of every pool per call, and a batched scatter
+    # would recompile for every distinct count of simultaneously-swapped
+    # shards (epoch installs must stay compile-free and cheap, DESIGN.md
+    # §11).  The shard id is a traced scalar, so one compile covers every
+    # shard; donating the pools retires the previous epoch's buffers, which
+    # no read path touches again (reads rebuild operands off the fresh
+    # snap_token below).
+    pools = {f: stk[f] for f in _DEVICE_FIELDS}
+    for s in shards:
+        dev = dev_slices.get(s) if dev_slices is not None else None
+        rows = {f: dev[f] if dev is not None and f in dev
+                else jnp.asarray(getattr(sdi, f)[s]) for f in _DEVICE_FIELDS}
+        pools = _install_shard_rows(pools, jnp.int32(s), rows)
+    stk.update(pools)
     stk["meta"] = jnp.asarray(sdi.meta)
     stk["last_leaf_min"] = jnp.asarray(sdi.last_leaf_min)
     stk["leaf_next_chain"] = jnp.asarray(sdi.leaf_next_chain)
+    stk["snap_token"] = new_snap_token()
     return stk
 
 

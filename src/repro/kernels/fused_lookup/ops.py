@@ -3,12 +3,14 @@ resolution, and entry points mirroring the ``core.lookup`` signatures.
 
 The kernel consumes u32-plane-packed pools (``fused_lookup.py`` module doc);
 packing a mirror costs one pass over every pool, so prepared operands are
-cached per snapshot dict.  The cache key is the identity of the operand dict
-*and* of its member arrays: every mutation path in the repo
-(``update_leaf_rows``, ``update_stacked_shard``, engine overlay refreshes)
-returns a NEW dict / new member arrays, so identity equality is exactly
-snapshot equality.  Cached dicts are pinned (strong refs) so ids cannot be
-recycled while an entry lives; the cache is a small FIFO.
+cached per snapshot.  The cache key is the snapshot's monotonic token
+(``snap_token`` / ``ov_token``, stamped by every mutation path in
+``core.lookup``): tokens are process-unique and never recycled, so — unlike
+the ``id(dict)`` keying this replaced — a garbage-collected snapshot's key
+can never be reissued to a new one and silently serve a stale pack
+(DESIGN.md §10 caveat).  Unstamped dicts (hand-built test operands) fall
+back to identity keying with the dict pinned so its id cannot be recycled
+while the entry lives.  The cache is a small bounded LRU.
 
 Entry points (drop-in for the jnp read path, same return conventions):
 
@@ -146,10 +148,11 @@ def _empty_overlay_args() -> tuple:
     return _EMPTY_OVERLAY
 
 
-# snapshot-dict id (+ member-array ids) -> prepared operands; dicts pinned
+# snapshot token (or pinned dict id for unstamped dicts) -> prepared
+# operands; bounded LRU (module doc)
 _FP_FIELDS = _DEVICE_FIELDS + ["meta", "last_leaf_min", "bounds"]
-_OPERANDS: "OrderedDict[int, tuple]" = OrderedDict()
-_OV_OPERANDS: "OrderedDict[int, tuple]" = OrderedDict()
+_OPERANDS: "OrderedDict[tuple, tuple]" = OrderedDict()
+_OV_OPERANDS: "OrderedDict[tuple, tuple]" = OrderedDict()
 _CACHE_LIMIT = 16
 
 
@@ -158,12 +161,24 @@ def clear_operand_cache() -> None:
     _OV_OPERANDS.clear()
 
 
-def _cached(cache: OrderedDict, src: dict, fingerprint: tuple, build):
-    ent = cache.get(id(src))
-    if ent is not None and ent[0] is src and ent[1] == fingerprint:
+def _cached(cache: OrderedDict, src: dict, fingerprint: tuple, build,
+            token=None):
+    """Prepared-operand lookup.  Token-stamped snapshots key by the token
+    (never recycled -> no pinning needed); unstamped dicts key by identity
+    and pin the dict.  The member-array fingerprint guards both against
+    in-place mutation of a cached dict — a mismatch rebuilds."""
+    if token is not None:
+        key, pin = ("tok", int(token)), None
+    else:
+        key, pin = ("id", id(src)), src
+    ent = cache.get(key)
+    if ent is not None and (pin is None or ent[0] is src) \
+            and ent[1] == fingerprint:
+        cache.move_to_end(key)
         return ent[2]
     ops = build(src)
-    cache[id(src)] = (src, fingerprint, ops)
+    cache[key] = (pin, fingerprint, ops)
+    cache.move_to_end(key)
     while len(cache) > _CACHE_LIMIT:
         cache.popitem(last=False)
     return ops
@@ -171,11 +186,13 @@ def _cached(cache: OrderedDict, src: dict, fingerprint: tuple, build):
 
 def _operands(arrs: dict) -> FusedOperands:
     fp = tuple(id(arrs[f]) for f in _FP_FIELDS if f in arrs)
-    return _cached(_OPERANDS, arrs, fp, FusedOperands)
+    return _cached(_OPERANDS, arrs, fp, FusedOperands,
+                   token=arrs.get("snap_token"))
 
 
 def _overlay_operands(ovr: dict) -> OverlayOperands:
-    return _cached(_OV_OPERANDS, ovr, (id(ovr["ov_pack"]),), OverlayOperands)
+    return _cached(_OV_OPERANDS, ovr, (id(ovr["ov_pack"]),), OverlayOperands,
+                   token=ovr.get("ov_token"))
 
 
 # ------------------------------------------------------------------ execution

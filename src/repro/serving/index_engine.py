@@ -47,6 +47,20 @@ from ..core.device_index import (DeviceIndex, build_device_index,
 
 MIN_SCAN_BUCKET = 8
 
+# shared background-build pool of the double-buffered compaction path
+# (DESIGN.md §11); one per process — builds are host-CPU + transfer bound and
+# each engine serializes its own swaps, so a small pool suffices
+_COMPACT_POOL = None
+
+
+def compaction_executor():
+    global _COMPACT_POOL
+    if _COMPACT_POOL is None:
+        import concurrent.futures
+        _COMPACT_POOL = concurrent.futures.ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="aulid-compact")
+    return _COMPACT_POOL
+
 
 def scan_bucket(count: int) -> int:
     """Power-of-two scan-length bucket: mixed scan workloads compile once per
@@ -83,13 +97,20 @@ class IndexShard:
     ``arrs``/``ov_arrs`` are the device copies the monolithic engine serves
     from; the sharded engine leaves them ``None`` and serves from the stacked
     pools instead (``with_arrays=False``), so a shard compaction only touches
-    its own slice of the stack."""
+    its own slice of the stack.
+
+    ``frozen_overlay``/``pending`` are the double-buffered compaction state
+    (DESIGN.md §11): while a background build is in flight the pre-freeze
+    overlay stays merged into reads, the host index is read-only, and writes
+    land in the (fresh) live overlay plus a pending log replayed at swap."""
     idx: Aulid
     overlay: DeltaOverlay
     di: DeviceIndex
     arrs: Optional[dict] = None
     ov_arrs: Optional[dict] = None
     compactions: int = 0
+    frozen_overlay: Optional[DeltaOverlay] = None
+    pending: list = dataclasses.field(default_factory=list)
 
     @classmethod
     def wrap(cls, idx: Aulid, gamma: float,
@@ -107,7 +128,21 @@ class IndexShard:
     # ---------------------------------------------------------------- writes
     def apply_write(self, op: str, key: int, payload: int = 0):
         """Host + overlay write (unique-key upsert semantics, module
-        docstring).  Returns the request result (True / delete outcome)."""
+        docstring).  Returns the request result (True / delete outcome).
+
+        While a background compaction is in flight the host index is
+        read-only (the build thread is walking it), so writes defer: they
+        land in the live overlay immediately (reads see them this step) and
+        in the pending log replayed at ``finish_swap``.  Results are computed
+        overlay-first so they match the synchronous path exactly."""
+        if self.frozen_overlay is not None:
+            self.pending.append((op, key, payload))
+            if op == "insert":
+                self.overlay.record_insert(key, payload)
+                return True
+            existed = self._key_live(key)
+            self.overlay.record_delete(key)
+            return existed
         if op == "insert":
             if not self.idx.update(key, payload):
                 self.idx.insert(key, payload)
@@ -116,9 +151,47 @@ class IndexShard:
         self.overlay.record_delete(key)
         return self.idx.delete(key)
 
+    def _key_live(self, key: int) -> bool:
+        """Whether ``key`` currently exists in the served view — the deferred
+        twin of ``idx.delete``'s return value: live overlay, then frozen
+        overlay, then the (frozen) host index."""
+        for ov in (self.overlay, self.frozen_overlay):
+            if ov is not None:
+                ent = ov.get(key)
+                if ent is not None:
+                    return not ent[1]
+        return self.idx.lookup(key) is not None
+
     # ------------------------------------------------------------ compaction
     def needs_compaction(self, gamma: float) -> bool:
         return len(self.overlay) >= gamma * max(self.idx.n_items, 1)
+
+    def freeze(self) -> DeltaOverlay:
+        """Freeze the overlay for a double-buffered compaction (DESIGN.md
+        §11): reads keep merging it over the old snapshot, writes move to a
+        fresh spawn, and the host index is read-only until ``finish_swap``.
+        Counted as this shard's compaction NOW (at the decision point), so
+        compaction counters are deterministic across sync/async modes."""
+        assert self.frozen_overlay is None, "compaction already in flight"
+        self.frozen_overlay = self.overlay
+        self.overlay = self.frozen_overlay.spawn_empty()
+        self.compactions += 1
+        return self.frozen_overlay
+
+    def finish_swap(self, new_di: DeviceIndex) -> None:
+        """Retire the frozen overlay and replay the pending log into the
+        host index (the writes deferred while the build ran).  Replayed
+        writes re-journal and fold at the NEXT compaction; the live overlay
+        already serves them to reads, so the served view never moves."""
+        self.di = new_di
+        self.frozen_overlay = None
+        pending, self.pending = self.pending, []
+        for op, key, payload in pending:
+            if op == "insert":
+                if not self.idx.update(key, payload):
+                    self.idx.insert(key, payload)
+            else:
+                self.idx.delete(key)
 
     def compact(self) -> None:
         """Fold the overlay into a fresh snapshot and clear it (DESIGN.md §3).
@@ -127,6 +200,8 @@ class IndexShard:
         (``update_leaf_rows``); a full rebuild re-transfers every pool.  When
         this shard serves from a stacked mirror (``arrs is None``) the device
         update is the owner engine's job (``restack_shard``)."""
+        assert self.frozen_overlay is None, \
+            "sync compact during in-flight compaction (drain first)"
         old = self.di
         self.di = refresh_device_index(self.idx, old)
         if self.arrs is not None:
@@ -141,8 +216,20 @@ class IndexShard:
         self.compactions += 1
 
     def refresh_overlay_arrays(self) -> None:
-        from ..core.lookup import overlay_arrays
-        self.ov_arrs = overlay_arrays(self.overlay)
+        from ..core.lookup import overlay_arrays, overlay_arrays_merged
+        if self.frozen_overlay is not None:
+            self.ov_arrs = overlay_arrays_merged(self.frozen_overlay,
+                                                 self.overlay)
+        else:
+            self.ov_arrs = overlay_arrays(self.overlay)
+
+    def overlay_live(self) -> int:
+        """Upper bound on live served-overlay entries (scan ``ov_bound``):
+        counts the frozen overlay too while a compaction is in flight."""
+        n = len(self.overlay)
+        if self.frozen_overlay is not None:
+            n += len(self.frozen_overlay)
+        return n
 
 
 class BaseIndexEngine:
@@ -187,6 +274,13 @@ class BaseIndexEngine:
         return self.submit("scan", key, count=count)
 
     # ---------------------------------------------------- subclass bindings
+    def _begin_step(self) -> None:
+        """Epoch-swap point of the double-buffered compaction lifecycle
+        (DESIGN.md §11): engines that build mirrors in the background install
+        any finished build here — between request batches, inside the step
+        timer (the swap cost is real serving cost), never mid-batch — so a
+        read batch only ever sees one epoch's pools."""
+
     def _snap(self) -> dict:
         """Device snapshot operand of the read entry points."""
         raise NotImplementedError
@@ -251,6 +345,7 @@ class BaseIndexEngine:
         if not self.queue:
             return 0
         t0 = time.perf_counter()
+        self._begin_step()
         batch, self.queue = self.queue, []
         writes = [r for r in batch if r.op in ("insert", "delete")]
         gets = [r for r in batch if r.op == "get"]
@@ -292,10 +387,19 @@ class BaseIndexEngine:
 
 
 class IndexEngine(BaseIndexEngine):
-    """Batching engine for mixed get/insert/delete/scan over one index."""
+    """Batching engine for mixed get/insert/delete/scan over one index.
+
+    ``async_compact=True`` enables the double-buffered compaction lifecycle
+    (DESIGN.md §11): crossing the gamma threshold freezes the overlay and
+    builds the refreshed mirror on a background thread while steps keep
+    serving old-snapshot + frozen-overlay reads; the finished build installs
+    at the next step boundary.  Default off — the monolithic engine is the
+    S=1 reference the equivalence tests pin down, and the sharded engine is
+    where stalls actually dominate."""
 
     def __init__(self, idx: Aulid, *, gamma: float = 0.05,
-                 auto_compact: bool = True, backend: str = "auto"):
+                 auto_compact: bool = True, backend: str = "auto",
+                 async_compact: bool = False):
         # imported lazily-adjacent (module import enables jax x64 — keep the
         # engine importable before the host index is even built)
         from ..core.lookup import (lookup_backend_fns, resolve_read_backend,
@@ -308,6 +412,9 @@ class IndexEngine(BaseIndexEngine):
         self._scan = scan_batch_overlay
         self.gamma = gamma
         self.auto_compact = auto_compact
+        self.async_compact = async_compact
+        self.swaps = 0
+        self._inflight = None
         self.shard = IndexShard.wrap(idx, gamma)
 
     # ------------------------------------------- shard-state delegation
@@ -342,13 +449,52 @@ class IndexEngine(BaseIndexEngine):
         self.writes_applied += 1
 
     def compact(self) -> None:
+        self.drain_compactions()
         self.shard.compact()
 
     def _maybe_compact(self) -> bool:
-        if self.auto_compact and self.shard.needs_compaction(self.gamma):
-            self.compact()
+        if not (self.auto_compact and self.shard.needs_compaction(self.gamma)):
+            return False
+        if not self.async_compact:
+            self.shard.compact()
             return True
-        return False
+        if self._inflight is None:     # one build in flight per engine
+            self.shard.freeze()
+            self._inflight = compaction_executor().submit(self._build_job)
+        return False   # reads still need the merged frozen+live pack
+
+    def _build_job(self):
+        """Background build+upload (DESIGN.md §11): refresh the host mirror
+        from the (frozen) index and prepare the full device pack off the
+        request path.  Only reads foreground state the in-flight window
+        freezes (``idx``, ``di``, ``arrs``)."""
+        from ..core.lookup import device_arrays, update_leaf_rows
+        shard = self.shard
+        old = shard.di
+        di = refresh_device_index(shard.idx, old)
+        if di is old and shard.arrs is not None:
+            arrs = update_leaf_rows(shard.arrs, di)
+        else:
+            arrs = device_arrays(di)
+        return di, arrs
+
+    def _install_ready(self, block: bool) -> None:
+        fut = self._inflight
+        if fut is None or (not block and not fut.done()):
+            return
+        di, arrs = fut.result()
+        self._inflight = None
+        self.shard.finish_swap(di)
+        self.shard.arrs = arrs
+        self.shard.refresh_overlay_arrays()   # frozen retired: live-only pack
+        self.swaps += 1
+
+    def _begin_step(self) -> None:
+        self._install_ready(block=False)
+
+    def drain_compactions(self) -> None:
+        """Block until any in-flight background compaction is installed."""
+        self._install_ready(block=True)
 
     def _after_writes(self) -> None:
         # compact() already rebuilds the overlay device pack (for the now-
@@ -367,7 +513,7 @@ class IndexEngine(BaseIndexEngine):
         return max(self.di.max_inner_height, 3)
 
     def _overlay_live(self) -> int:
-        return len(self.overlay)
+        return self.shard.overlay_live()
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:
@@ -376,6 +522,8 @@ class IndexEngine(BaseIndexEngine):
             "read_backend": self.read_backend,
             "overlay_len": len(self.overlay),
             "compactions": self.compactions,
+            "swaps": self.swaps,
+            "inflight": int(self._inflight is not None),
             "mirror_refreshes": self.di.refreshes,
             "mirror_full_builds": self.di.full_builds,
         }

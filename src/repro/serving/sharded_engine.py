@@ -20,24 +20,33 @@ one :class:`IndexShard` per range:
   the key space in order, so concatenation in shard order IS the sort).
 
 Request semantics are identical to the monolithic engine, request for request
-(property-tested in ``tests/test_sharded_engine.py``).
+(property-tested in ``tests/test_sharded_engine.py``), and — per the
+compaction-storm suite in ``tests/test_async_compaction.py`` — identical
+whether compactions run synchronously or double-buffered (DESIGN.md §11):
+with ``async_compact=True`` (the default) a shard crossing its gamma
+threshold freezes its overlay, builds + uploads its refreshed mirror slice on
+a background thread, and installs it at a later step boundary while reads
+keep serving the old epoch merged with the frozen overlay.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from ..core.delta_overlay import UINT64_MAX, next_pow2
-from ..core.device_index import (rechain_stacked, restack_shard,
-                                 stack_device_indexes)
+from ..core.delta_overlay import UINT64_MAX, merge_overlays, next_pow2
+from ..core.device_index import (install_shard_slices, pad_shard_slices,
+                                 rechain_stacked, refresh_device_index,
+                                 restack_shard, stack_device_indexes)
 from ..core.partition import RangePartition
-from .index_engine import BaseIndexEngine, IndexRequest, IndexShard
+from .index_engine import (BaseIndexEngine, IndexRequest, IndexShard,
+                           compaction_executor)
 
 
 class ShardedIndexEngine(BaseIndexEngine):
     """Batching engine for mixed get/insert/delete/scan over range shards."""
 
     def __init__(self, part: RangePartition, *, gamma: float = 0.05,
-                 auto_compact: bool = True, backend: str = "auto"):
+                 auto_compact: bool = True, backend: str = "auto",
+                 async_compact: bool = True):
         from ..core.lookup import (lookup_backend_fns, resolve_read_backend,
                                    scan_batch_sharded_overlay,
                                    stacked_device_arrays,
@@ -53,6 +62,7 @@ class ShardedIndexEngine(BaseIndexEngine):
         self.part = part
         self.gamma = gamma
         self.auto_compact = auto_compact
+        self.async_compact = async_compact
         self.shards = [IndexShard.wrap(idx, gamma, with_arrays=False)
                        for idx in part.shards]
         self.sdi = stack_device_indexes([sh.di for sh in self.shards],
@@ -62,8 +72,17 @@ class ShardedIndexEngine(BaseIndexEngine):
         # shape for the overlay pack across the shards' whole lifetime
         self._ov_floor = next_pow2(
             max(int(gamma * max(part.n_items, 1)), 64))
+        # merged-pack rebuild memo: per-shard segment cache + whole-pack
+        # signature, both keyed by the overlays' never-recycled (uid, version)
+        # pairs — steps whose writes changed nothing skip the O(total) rebuild
+        self._seg_cache: dict[int, tuple] = {}
+        self._pack_sig: tuple | None = None
+        self._pack_live = 0
+        self.pack_skips = 0
         self.ov_arrs = self._merged_overlay_pack()
         self.restacks = 0                     # full re-stacks (shard outgrew pad)
+        self.swaps = 0                        # double-buffered epoch swaps
+        self._inflight: dict[int, object] = {}   # shard id -> build Future
 
     @property
     def num_shards(self) -> int:
@@ -87,13 +106,93 @@ class ShardedIndexEngine(BaseIndexEngine):
 
     def _maybe_compact(self) -> None:
         """Shard-local compaction: only shards past their own gamma threshold
-        fold their overlay; their mirror slices alone are re-uploaded."""
+        fold their overlay.  Synchronous mode re-uploads their mirror slices
+        inline; double-buffered mode (default) freezes each shard's overlay
+        and hands the build+upload to a background thread (DESIGN.md §11) —
+        one build in flight per shard."""
         changed = [s for s, sh in enumerate(self.shards)
-                   if sh.needs_compaction(self.gamma)]
-        for s in changed:
-            self.shards[s].compact()
-        if changed:
+                   if sh.needs_compaction(self.gamma)
+                   and s not in self._inflight]
+        if not changed:
+            return
+        if not self.async_compact:
+            for s in changed:
+                self.shards[s].compact()
             self._refresh_stack(changed)
+            return
+        for s in changed:
+            self.shards[s].freeze()
+            self._inflight[s] = compaction_executor().submit(
+                self._build_job, s, self.sdi)
+
+    def _build_job(self, s: int, sdi):
+        """Background build+upload for shard ``s`` (freeze -> build -> upload
+        of the lifecycle): refresh the shard mirror, pad it to the stacked
+        slice shapes, and push the slices to device — all off the request
+        path.  Only reads state the in-flight window freezes (the shard's
+        host index and mirror); ``sdi`` is captured at submit so a concurrent
+        full re-stack is detected at install time."""
+        import jax
+        import jax.numpy as jnp
+        sh = self.shards[s]
+        di = refresh_device_index(sh.idx, sh.di)
+        slices = pad_shard_slices(sdi, di)
+        dev = None
+        if slices is not None:
+            dev = {f: jax.device_put(jnp.asarray(v))
+                   for f, v in slices.items()
+                   if f not in ("meta", "last_leaf_min")}
+        return s, di, sdi, slices, dev
+
+    def _install_ready(self, block: bool) -> None:
+        """Swap stage (DESIGN.md §11), run between request batches: install
+        every finished background build — retire its frozen overlay, replay
+        deferred host writes, scatter the pre-uploaded device slices into the
+        stacked pools — and rechain once.  A build whose slices no longer fit
+        the current stack (concurrent full re-stack, or the shard outgrew its
+        pad) falls back to the synchronous re-stack path."""
+        if not self._inflight:
+            return
+        ready = []
+        for s in list(self._inflight):
+            fut = self._inflight[s]
+            if block or fut.done():
+                del self._inflight[s]
+                ready.append(fut.result())
+        if not ready:
+            return
+        changed, dev_slices, need_full = [], {}, False
+        for s, di, sdi_ref, slices, dev in ready:
+            self.shards[s].finish_swap(di)
+            changed.append(s)
+            if (sdi_ref is self.sdi and slices is not None
+                    and all(dev[f].shape == getattr(self.sdi, f).shape[1:]
+                            for f in dev)):
+                install_shard_slices(self.sdi, s, di, slices)
+                dev_slices[s] = dev
+            else:
+                self.sdi.dis[s] = di
+                if not restack_shard(self.sdi, s, rechain=False):
+                    need_full = True
+        self.swaps += len(changed)
+        if need_full:
+            self.sdi = stack_device_indexes([sh.di for sh in self.shards],
+                                            self.part.bounds)
+            self.stk = self._stacked_device_arrays(self.sdi)
+            self.restacks += 1
+        else:
+            rechain_stacked(self.sdi)   # once, after all installs
+            self.stk = self._update_stacked_shard(self.stk, self.sdi, changed,
+                                                  dev_slices=dev_slices)
+        # frozen overlays retired -> merged pack must drop their entries
+        self.ov_arrs = self._merged_overlay_pack()
+
+    def _begin_step(self) -> None:
+        self._install_ready(block=False)
+
+    def drain_compactions(self) -> None:
+        """Block until every in-flight background compaction is installed."""
+        self._install_ready(block=True)
 
     def _refresh_stack(self, changed: list[int]) -> None:
         for s in changed:
@@ -109,28 +208,57 @@ class ShardedIndexEngine(BaseIndexEngine):
             self.restacks += 1
 
     # ----------------------------------------------------------- overlay pack
+    def _overlay_sig(self) -> tuple:
+        """Per-shard (live uid, live version, frozen uid, frozen version)
+        signature of the served overlay state — uids are never recycled
+        (``delta_overlay`` module doc), so signature equality is exactly
+        served-view equality."""
+        return tuple((sh.overlay.uid, sh.overlay.version,
+                      sh.frozen_overlay.uid if sh.frozen_overlay else 0,
+                      sh.frozen_overlay.version if sh.frozen_overlay else 0)
+                     for sh in self.shards)
+
     def _merged_overlay_pack(self) -> dict:
-        """Concatenate the shards' sorted overlays into one globally sorted
-        padded pack (same format as ``overlay_arrays``): shard key ranges are
-        disjoint and ordered, so shard order IS global key order."""
+        """Concatenate the shards' sorted overlays (frozen merged under live
+        while a compaction is in flight) into one globally sorted padded pack
+        (same format as ``overlay_arrays``): shard key ranges are disjoint
+        and ordered, so shard order IS global key order.
+
+        Rebuilds are memoized on the overlay signature: untouched shards
+        reuse their cached merged segment, and a step that changed nothing
+        reuses the whole pack — at high shard counts this rebuild is the
+        dominant per-step host cost, and most steps touch few shards."""
+        sig = self._overlay_sig()
+        if sig == self._pack_sig and self.ov_arrs is not None:
+            self.pack_skips += 1
+            return self.ov_arrs
         import jax.numpy as jnp
-        total = sum(len(sh.overlay) for sh in self.shards)
+        from ..core.lookup import new_snap_token
+        segs = []
+        total = 0
+        for s, (sh, ssig) in enumerate(zip(self.shards, sig)):
+            ent = self._seg_cache.get(s)
+            if ent is None or ent[0] != ssig:
+                ent = (ssig, merge_overlays(sh.frozen_overlay, sh.overlay))
+                self._seg_cache[s] = ent
+            segs.append(ent[1])
+            total += ent[1][0].shape[0]
         cap = max(self._ov_floor, next_pow2(total))
         pack = np.empty((3, cap), dtype=np.uint64)
         pack[0] = UINT64_MAX
         pack[1] = 0
         pack[2] = 0
         off = 0
-        for sh in self.shards:
-            n = len(sh.overlay)
-            if not n:
-                continue
-            a = sh.overlay.arrays()
-            pack[0, off:off + n] = a["ov_keys"][:n]
-            pack[1, off:off + n] = a["ov_pay"][:n]
-            pack[2, off:off + n] = a["ov_tomb"][:n]
-            off += n
-        return {"ov_pack": jnp.asarray(pack)}
+        for keys, pays, tomb in segs:
+            n = keys.shape[0]
+            if n:
+                pack[0, off:off + n] = keys
+                pack[1, off:off + n] = pays
+                pack[2, off:off + n] = tomb
+                off += n
+        self._pack_sig = sig
+        self._pack_live = total
+        return {"ov_pack": jnp.asarray(pack), "ov_token": new_snap_token()}
 
     # ------------------------------------------------------------- read path
     # qcap stays at its always-safe default (the padded batch size): a
@@ -146,7 +274,9 @@ class ShardedIndexEngine(BaseIndexEngine):
         return max(self.sdi.max_inner_height, 3)
 
     def _overlay_live(self) -> int:
-        return sum(len(sh.overlay) for sh in self.shards)
+        # tracked pack occupancy: the pack was (re)built or reused this step,
+        # so its recorded fill IS the served frozen+live entry count
+        return self._pack_live
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:
@@ -154,11 +284,14 @@ class ShardedIndexEngine(BaseIndexEngine):
             **super().stats(),
             "read_backend": self.read_backend,
             "num_shards": self.num_shards,
-            "overlay_len": sum(len(sh.overlay) for sh in self.shards),
+            "overlay_len": sum(sh.overlay_live() for sh in self.shards),
             "compactions": self.compactions,
             "compactions_per_shard": [sh.compactions for sh in self.shards],
             "mirror_refreshes": sum(sh.di.refreshes for sh in self.shards),
             "mirror_full_builds": sum(sh.di.full_builds
                                       for sh in self.shards),
             "full_restacks": self.restacks,
+            "swaps": self.swaps,
+            "inflight": len(self._inflight),
+            "pack_skips": self.pack_skips,
         }

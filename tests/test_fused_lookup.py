@@ -28,6 +28,7 @@ from repro.kernels.fused_lookup import (PoolGeometry, TileStrategy,
                                         fused_lookup_batch_sharded,
                                         fused_lookup_batch_sharded_overlay)
 from repro.kernels.fused_lookup import tuning
+from repro.kernels.fused_lookup import ops as ops_mod
 from repro.serving import IndexEngine, ShardedIndexEngine
 
 import jax.numpy as jnp
@@ -380,3 +381,82 @@ class TestBackendDispatch:
         ra = self._drive(a, keys, np.random.default_rng(13))
         rb = self._drive(b, keys, np.random.default_rng(13))
         assert ra == rb
+
+
+class TestOperandCacheTokens:
+    """Operand-pack cache keying (DESIGN.md §10 caveat): keyed by the
+    snapshot's monotonic token, never by a recyclable ``id()``."""
+
+    def setup_method(self):
+        ops_mod.clear_operand_cache()
+
+    def teardown_method(self):
+        ops_mod.clear_operand_cache()
+
+    def test_distinct_snapshots_distinct_entries(self):
+        keys, idx, di, arrs, h = _mono("covid")
+        a1 = device_arrays(di)
+        a2 = device_arrays(di)          # same content, NEW snapshot token
+        assert a1["snap_token"] != a2["snap_token"]
+        p1 = ops_mod._operands(a1)
+        p2 = ops_mod._operands(a2)
+        assert p1 is not p2
+        assert ops_mod._operands(a1) is p1    # both stay resident
+        assert ops_mod._operands(a2) is p2
+
+    def test_id_reuse_cannot_alias(self):
+        """The historical bug: a GC'd snapshot dict's id given to a new
+        snapshot must NOT hit the old pack.  Token keys make the dict's id
+        irrelevant — equal ids, different tokens, different packs."""
+        keys, idx, di, arrs, h = _mono("covid")
+        a1 = device_arrays(di)
+        p1 = ops_mod._operands(a1)
+        a2 = device_arrays(di)
+        a2_id = id(a2)
+        p2 = ops_mod._operands(a2)
+        assert p2 is not p1
+        del a2                               # id(a2) may now be recycled
+        a3 = device_arrays(di)
+        p3 = ops_mod._operands(a3)
+        assert p3 is not p1                  # fresh token -> fresh entry
+        del a2_id, a3
+
+    def test_unstamped_dict_fallback_pins(self):
+        """Hand-built operand dicts (no token) still cache — keyed by
+        identity with the dict pinned so the id cannot be recycled while
+        the entry lives."""
+        keys, idx, di, arrs, h = _mono("covid")
+        bare = {k: v for k, v in device_arrays(di).items()
+                if k != "snap_token"}
+        p1 = ops_mod._operands(bare)
+        assert ops_mod._operands(bare) is p1
+        ent = ops_mod._OPERANDS[("id", id(bare))]
+        assert ent[0] is bare                # pinned
+
+    def test_eviction_bound(self):
+        keys, idx, di, arrs, h = _mono("covid")
+        packs = [ops_mod._operands(device_arrays(di))
+                 for _ in range(ops_mod._CACHE_LIMIT + 5)]
+        assert len(ops_mod._OPERANDS) == ops_mod._CACHE_LIMIT
+        del packs
+
+    def test_lru_keeps_hot_entries(self):
+        keys, idx, di, arrs, h = _mono("covid")
+        hot = device_arrays(di)
+        ops_mod._operands(hot)
+        for _ in range(ops_mod._CACHE_LIMIT - 1):
+            ops_mod._operands(device_arrays(di))
+        hot_pack = ops_mod._operands(hot)     # touch: moves to MRU
+        ops_mod._operands(device_arrays(di))  # evicts the LRU, not `hot`
+        assert ops_mod._operands(hot) is hot_pack
+
+    def test_overlay_token_keying(self):
+        ov = DeltaOverlay()
+        ov.record_insert(5, 50)
+        o1 = overlay_arrays(ov)
+        p1 = ops_mod._overlay_operands(o1)
+        ov.record_insert(6, 60)
+        o2 = overlay_arrays(ov)
+        assert o2["ov_token"] != o1["ov_token"]
+        assert ops_mod._overlay_operands(o2) is not p1
+        assert ops_mod._overlay_operands(o1) is p1
