@@ -31,6 +31,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 SERVING_SECTIONS = {
     "engines": "sharded_serving",
     "compaction_storm": "sharded_serving",
+    "drift": "sharded_serving",
     "device_lookup": "device_lookup",
     "mixed_serving": "mixed_serving",
 }
@@ -40,8 +41,9 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
     """Collate the serving benchmarks' saved rows into one machine-readable
     `BENCH_serving.json` at the repo root: per-engine throughput, p99 step
     latency, compaction counts (monolithic vs sharded), the compaction-storm
-    flatness numbers (sync vs double-buffered, DESIGN.md §11), and the
-    device read path (jnp vs fused Pallas kernel, per-geometry tuning
+    flatness numbers (sync vs double-buffered, DESIGN.md §11), the drift
+    scenario (frozen vs online-repartitioning boundary table, DESIGN.md
+    §12), and the device read path (jnp vs fused Pallas kernel, per-geometry tuning
     choice), so the serving perf trajectory accumulates across PRs.
 
     Sections merge, never fork: only the sections whose source module ran
@@ -80,6 +82,7 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
         rows = data.get("rows", [])
         hot = [r for r in rows if r.get("scenario", "hot_shard") == "hot_shard"]
         storm = [r for r in rows if r.get("scenario") == "storm"]
+        drift = [r for r in rows if r.get("scenario") == "drift"]
         sections["engines"] = {
             "emitter": "sharded_serving", "generated": stamp,
             "meta": data.get("meta", {}),
@@ -108,6 +111,28 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
                     "swaps": row.get("swaps"),
                     "full_restacks": row.get("full_restacks"),
                 } for row in storm},
+            }
+        if drift:
+            meta = data.get("meta", {})
+            sections["drift"] = {
+                "emitter": "sharded_serving", "generated": stamp,
+                "ratio_bound_gate": meta.get("drift_ratio_bound"),
+                "p99_flatness_gate": meta.get("drift_p99_flatness"),
+                "engines": {row["engine"]: {
+                    "shards": row.get("shards"),
+                    "final_ratio": row.get("final_ratio"),
+                    "max_ratio": row.get("max_ratio"),
+                    "splits": row.get("splits"),
+                    "merges": row.get("merges"),
+                    "drift_p99_ms": row.get("drift_p99_ms"),
+                    "steady_p99_ms": row.get("steady_p99_ms"),
+                    "drift_p99_ratio": row.get("drift_p99_ratio"),
+                    "repart_steps": row.get("repart_steps"),
+                    "compact_steps": row.get("compact_steps"),
+                    "compile_steps": row.get("compile_steps"),
+                    "full_restacks": row.get("full_restacks"),
+                    "boundary_version": row.get("boundary_version"),
+                } for row in drift},
             }
         changed = True
     data = load("mixed_serving")

@@ -1,7 +1,9 @@
 """Checkpointing: sharded pytree save/restore + learned manifest + elastic
-resharding."""
-from .ckpt import (load_manifest, restore_checkpoint, restore_params_subset,
-                   save_checkpoint)
+resharding + serving-partition snapshots."""
+from .ckpt import (latest_partition_step, load_manifest, load_partition,
+                   restore_checkpoint, restore_params_subset, save_checkpoint,
+                   save_partition)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "restore_params_subset",
-           "load_manifest"]
+           "load_manifest", "save_partition", "load_partition",
+           "latest_partition_step"]

@@ -4,6 +4,8 @@ Layout on disk:
   <dir>/step_<n>/shard_<i>.npz   — flattened leaves, round-robin over shards
   <dir>/step_<n>/manifest.json   — path -> (shard, entry, shape, dtype) + meta
   <dir>/step_<n>/manifest.idx.npz— AULID bulkload arrays: fnv1a(path) -> slot
+  <dir>/part_<n>/partition.npz   — RangePartition bounds + per-shard items
+  <dir>/part_<n>/partition.json  — boundary-table version + AulidConfig
 
 The JSON manifest is the source of truth; the learned index over path-hash
 keys is what a 1000-node restore would use for *partial* reads (each worker
@@ -17,6 +19,7 @@ the latest-complete checkpoint; ``latest_step`` scans completed dirs only.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import pathlib
@@ -25,8 +28,9 @@ import shutil
 import jax
 import numpy as np
 
-from ..core.aulid import Aulid
+from ..core.aulid import Aulid, AulidConfig
 from ..core.blockdev import BlockDevice
+from ..core.partition import RangePartition
 
 SHARDS = 8
 
@@ -121,6 +125,76 @@ def restore_checkpoint(ckpt_dir: str, tree_like, shardings=None):
         arr = load(jax.tree_util.keystr(p))
         out.append(jax.device_put(arr, sh) if sh is not None else arr)
     return jax.tree.unflatten(treedef, out), manifest
+
+
+# --------------------------------------------------- RangePartition snapshots
+#
+# A serving-engine partition checkpoint (DESIGN.md §12): per-shard resident
+# items + the CURRENT boundary table.  Version history and pins are in-flight
+# state — a restore by definition has no in-flight steps or builds, so it
+# lands on the newest version with an empty pin table and a single-entry
+# history, and routes identically to the saved partition.
+
+
+def save_partition(dirpath: str, step: int, part: RangePartition) -> str:
+    """Atomically snapshot a :class:`RangePartition` (same tmp+rename
+    protocol as ``save_checkpoint``)."""
+    base = pathlib.Path(dirpath)
+    final = base / f"part_{step:08d}"
+    tmp = base / f".tmp_part_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    arrays: dict[str, np.ndarray] = {
+        "bounds": np.asarray(part.bounds, dtype=np.uint64)}
+    for s in range(part.num_shards):
+        keys, pays = part.shard_items(s)
+        arrays[f"keys_{s}"] = keys
+        arrays[f"pays_{s}"] = pays
+    np.savez(tmp / "partition.npz", **arrays)
+    meta = {
+        "step": int(step),
+        "version": int(part.version),
+        "num_shards": int(part.num_shards),
+        "cfg": dataclasses.asdict(part.shards[0].cfg),
+    }
+    (tmp / "partition.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return str(final)
+
+
+def latest_partition_step(dirpath: str) -> int | None:
+    base = pathlib.Path(dirpath)
+    if not base.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in base.glob("part_*")
+             if (p / "partition.json").exists()]
+    return max(steps) if steps else None
+
+
+def load_partition(ckpt_dir: str) -> RangePartition:
+    """Rebuild a :class:`RangePartition` from a ``save_partition`` snapshot.
+
+    The restored partition lands on the snapshot's (newest) boundary-table
+    version with zero pins and a one-entry history — retired versions only
+    ever existed to serve in-flight work, and a restore has none."""
+    d = pathlib.Path(ckpt_dir)
+    meta = json.loads((d / "partition.json").read_text())
+    arrays = np.load(d / "partition.npz")
+    cfg_dict = dict(meta["cfg"])
+    cfg_dict["pa_classes"] = tuple(cfg_dict["pa_classes"])
+    cfg = AulidConfig(**cfg_dict)
+    shards = []
+    for s in range(meta["num_shards"]):
+        sh = Aulid(BlockDevice(block_bytes=cfg.block_bytes), cfg=cfg)
+        sh.bulkload(arrays[f"keys_{s}"], arrays[f"pays_{s}"])
+        shards.append(sh)
+    part = RangePartition(arrays["bounds"].astype(np.uint64), shards,
+                          version=int(meta["version"]))
+    part.check_invariants()
+    return part
 
 
 def restore_params_subset(ckpt_dir: str, paths: list[str]) -> dict:

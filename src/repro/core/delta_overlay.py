@@ -109,6 +109,16 @@ class DeltaOverlay:
         self._cache = None
         self.version += 1
 
+    def merge_under(self, other: "DeltaOverlay") -> None:
+        """Fold ``other``'s entries UNDER this overlay's (per-key, this
+        overlay wins) — the abort path of a failed background build
+        (DESIGN.md §12): the frozen overlay's entries must stay visible over
+        the still-live old snapshot, while post-freeze writes keep winning."""
+        for key, ent in other._map.items():
+            self._map.setdefault(key, ent)
+        self._cache = None
+        self.version += 1
+
     # ---------------------------------------------------------------- reads
     def __len__(self) -> int:
         return len(self._map)

@@ -321,6 +321,37 @@ class StackedDeviceIndex:
         }
 
 
+def placeholder_device_index() -> DeviceIndex:
+    """An empty shard-slot mirror for shard-count padding (DESIGN.md §12):
+    all pools are one sentinel-filled row, ``root_node=-1`` (no traversal),
+    and ``leaf_rows`` is empty so the successor chain skips it.  Slots padded
+    with these never receive queries — the padded boundary table routes every
+    key at or below the last real shard — but their pool contents are valid
+    sentinels anyway."""
+    return DeviceIndex(
+        slot_tag=np.zeros(1, dtype=np.uint8),
+        slot_key=np.full(1, UINT64_MAX, dtype=np.uint64),
+        slot_ptr=np.full(1, -1, dtype=np.int32),
+        next_occ=np.full(1, -1, dtype=np.int32),
+        succ_slot=np.full(1, -1, dtype=np.int32),
+        node_base=np.zeros(1, dtype=np.int32),
+        node_fanout=np.ones(1, dtype=np.int32),
+        node_slope=np.zeros(1, dtype=np.float64),
+        node_intercept=np.zeros(1, dtype=np.float64),
+        node_overflow_slot=np.full(1, -1, dtype=np.int32),
+        pa_keys=np.full((1, 1), UINT64_MAX, dtype=np.uint64),
+        pa_ptrs=np.zeros((1, 1), dtype=np.int32),
+        bt_keys=np.full((1, 1), UINT64_MAX, dtype=np.uint64),
+        bt_ptrs=np.zeros((1, 1), dtype=np.int32),
+        leaf_keys=np.full((1, 1), UINT64_MAX, dtype=np.uint64),
+        leaf_pay=np.zeros((1, 1), dtype=np.uint64),
+        leaf_count=np.zeros(1, dtype=np.int32),
+        leaf_next=np.full(1, -1, dtype=np.int32),
+        root_node=-1, last_leaf_row=0, last_leaf_min=UINT64_MAX,
+        inner_height=0, leaf_rows={},
+    )
+
+
 _STACK_2D = [("slot_tag", 0), ("slot_key", UINT64_MAX), ("slot_ptr", -1),
              ("next_occ", -1), ("succ_slot", -1), ("node_base", 0),
              ("node_fanout", 1), ("node_slope", 0.0), ("node_intercept", 0.0),
@@ -362,8 +393,19 @@ def _chain_rows(dis: list[DeviceIndex], Lmax: int) -> np.ndarray:
     return chain
 
 
-def stack_device_indexes(dis: list[DeviceIndex],
-                         bounds: np.ndarray) -> StackedDeviceIndex:
+def stacked_pool_caps(sdi: StackedDeviceIndex) -> dict:
+    """Per-shard pool capacities of an existing stack (shape minus the
+    leading shard axis).  Pass as ``min_caps`` to :func:`stack_device_indexes`
+    to ratchet capacities: a rebuild then never SHRINKS a pool dim, so the
+    jitted read shapes only ever change when a pool genuinely outgrows its
+    pad — a split/merge install that adopts a freshly stacked mirror keeps
+    every compile warm (DESIGN.md §12)."""
+    return {f: getattr(sdi, f).shape[1:] for f, _ in _STACK_2D + _STACK_3D}
+
+
+def stack_device_indexes(dis: list[DeviceIndex], bounds: np.ndarray,
+                         min_shards: int = 0,
+                         min_caps: dict | None = None) -> StackedDeviceIndex:
     """Pad all shard mirrors to uniform pool capacities and stack them into
     ``(S, …)``-leading arrays (DESIGN.md §9).  Padding reuses the pools' own
     sentinel values (+inf keys, -1 links, NULL tags) so a vmapped per-shard
@@ -374,13 +416,34 @@ def stack_device_indexes(dis: list[DeviceIndex],
     in place across compactions) and keeps the stacked shapes — and
     therefore the jitted read path's compiles — stable across full
     re-stacks.  Fixed per-entry capacities (e.g. ``leaf_capacity``) round to
-    a plain power of two."""
+    a plain power of two.
+
+    ``min_shards`` pads the leading shard axis itself to at least that many
+    slots (DESIGN.md §12): trailing slots hold :func:`placeholder_device_index`
+    mirrors and the boundary table is UINT64_MAX-padded, so ``searchsorted``
+    (and the fused kernel's ``count(bounds < q)`` twin) routes every real key
+    to a real shard and the padding slots never see a query.  Repartitioning
+    engines size ``min_shards`` pow2+headroom above the live shard count so a
+    split/merge within capacity keeps every stacked shape — and every jitted
+    read compile — unchanged.  The default (0) preserves exact-fit stacking.
+
+    ``min_caps`` (see :func:`stacked_pool_caps`) floors each pool dim so a
+    rebuild never shrinks a shape the read path already compiled for."""
     assert dis, "need at least one shard mirror"
     assert len(bounds) == len(dis) - 1, (len(bounds), len(dis))
+    if min_shards > len(dis):
+        pad = min_shards - len(dis)
+        dis = list(dis) + [placeholder_device_index() for _ in range(pad)]
+        bounds = np.concatenate([
+            np.asarray(bounds, dtype=np.uint64),
+            np.full(pad, UINT64_MAX, dtype=np.uint64)])
 
     def dim_cap(f: str, d: int) -> int:
         m = max(getattr(di, f).shape[d] for di in dis)
-        return next_pow2(m + m // 4 + 1 if d == 0 else m)
+        cap = next_pow2(m + m // 4 + 1 if d == 0 else m)
+        if min_caps is not None and f in min_caps:
+            cap = max(cap, int(min_caps[f][d]))
+        return cap
 
     shapes = {f: tuple(dim_cap(f, d)
                        for d in range(getattr(dis[0], f).ndim))

@@ -373,14 +373,22 @@ def _overlay_scan_merge(ks, ps, vs, keys, pays, tombs, q, count: int):
 # (S*L,) leaf pools through the precomputed shard-successor chain, so a range
 # crossing a shard boundary keeps streaming blocks with no host round-trip.
 
-def stacked_device_arrays(sdi) -> dict[str, jnp.ndarray]:
-    """Move a :class:`StackedDeviceIndex`'s pools to device arrays."""
+def stacked_device_arrays(sdi, bounds_version: int = 0
+                          ) -> dict[str, jnp.ndarray]:
+    """Move a :class:`StackedDeviceIndex`'s pools to device arrays.
+
+    ``bounds_version`` records which boundary-table version the pack's
+    ``bounds`` array belongs to (DESIGN.md §12) — informational for
+    stats/tests; operand-pack caches are invalidated by the fresh
+    ``snap_token`` every build stamps, so a split/merge (which always builds
+    a new pack) can never serve reads through stale cached route operands."""
     d = {f: jnp.asarray(getattr(sdi, f)) for f in _DEVICE_FIELDS}
     d["meta"] = jnp.asarray(sdi.meta)
     d["last_leaf_min"] = jnp.asarray(sdi.last_leaf_min)
     d["bounds"] = jnp.asarray(sdi.bounds)
     d["leaf_next_chain"] = jnp.asarray(sdi.leaf_next_chain)
     d["snap_token"] = new_snap_token()
+    d["bounds_version"] = int(bounds_version)
     return d
 
 

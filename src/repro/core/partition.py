@@ -6,13 +6,23 @@ makes compaction stalls shard-local (DESIGN.md §9): each shard owns a host
 ``Aulid`` (with its own change journal and block device), so a hot shard
 folding its overlay never rebuilds a cold shard's mirror.
 
-The shard boundary table is built once, from bulkload key quantiles:
+The shard boundary table is seeded from bulkload key quantiles:
 ``bounds[s]`` is the *inclusive* upper key of shard ``s`` (the last shard is
 unbounded above), and routing any key — read or write — is a single
-``searchsorted`` over the (S-1)-entry table.  Bounds are frozen after
-bulkload: inserts beyond a shard's original key range still route to the same
-shard, so host, overlay, and stacked-mirror views agree request-for-request
-with a monolithic index (property-tested in ``tests/test_sharded_engine.py``).
+``searchsorted`` over the (S-1)-entry table.
+
+Since PR 8 the table is **versioned** (DESIGN.md §12): online split/merge
+(``apply_split`` / ``apply_merge``) installs a new bounds array under a bumped
+``version`` while every retired version stays in ``history`` for as long as
+someone has it pinned.  In-flight work (an engine step, a background split
+build) calls ``pin()`` to hold the version it routes on and ``unpin()`` when
+done; unpinned non-current versions are garbage-collected.  Routing is still
+one ``searchsorted`` — per version.  Split/merge planning (``plan_split``)
+picks the median key of a shard so both halves are non-empty, and the apply
+methods keep ``shards``/``bounds``/``history`` consistent so host, overlay,
+and stacked-mirror views agree request-for-request with a monolithic index
+(property-tested in ``tests/test_sharded_engine.py`` and
+``tests/test_repartition.py``).
 """
 from __future__ import annotations
 
@@ -31,6 +41,18 @@ class RangePartition:
 
     bounds: np.ndarray          # (S-1,) u64 inclusive upper key per shard
     shards: list[Aulid]
+    # versioned boundary table (DESIGN.md §12): monotonically increasing
+    # version, per-version bounds snapshots, and pin counts keeping retired
+    # versions alive while in-flight steps/builds still route on them
+    version: int = 0
+    history: dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict, repr=False)
+    _pins: dict[int, int] = dataclasses.field(
+        default_factory=dict, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.version not in self.history:
+            self.history[self.version] = self.bounds
 
     @property
     def num_shards(self) -> int:
@@ -41,14 +63,113 @@ class RangePartition:
         return sum(sh.n_items for sh in self.shards)
 
     # -------------------------------------------------------------- routing
-    def shard_of(self, key: int) -> int:
-        """One searchsorted over the boundary table (DESIGN.md §9)."""
-        return int(np.searchsorted(self.bounds, np.uint64(int(key)),
-                                   side="left"))
+    def bounds_at(self, version: Optional[int] = None) -> np.ndarray:
+        """The boundary table of ``version`` (default: current).  Retired
+        versions are only reachable while pinned (see :meth:`pin`)."""
+        return self.history[self.version if version is None else version]
 
-    def shard_of_batch(self, keys: np.ndarray) -> np.ndarray:
+    def shard_of(self, key: int, version: Optional[int] = None) -> int:
+        """One searchsorted over the (versioned) boundary table
+        (DESIGN.md §9, §12)."""
+        return int(np.searchsorted(self.bounds_at(version),
+                                   np.uint64(int(key)), side="left"))
+
+    def shard_of_batch(self, keys: np.ndarray,
+                       version: Optional[int] = None) -> np.ndarray:
         keys = np.asarray(keys, dtype=np.uint64)
-        return np.searchsorted(self.bounds, keys, side="left").astype(np.int32)
+        return np.searchsorted(self.bounds_at(version), keys,
+                               side="left").astype(np.int32)
+
+    # ----------------------------------------------------- version lifecycle
+    def pin(self, version: Optional[int] = None) -> int:
+        """Pin a boundary-table version (default: current) so its bounds stay
+        in ``history`` across splits/merges; returns the pinned version."""
+        v = self.version if version is None else int(version)
+        assert v in self.history, f"version {v} already retired"
+        self._pins[v] = self._pins.get(v, 0) + 1
+        return v
+
+    def unpin(self, version: int) -> None:
+        """Release a pin; a retired version with zero pins is GC'd."""
+        v = int(version)
+        n = self._pins.get(v, 0)
+        assert n > 0, f"unbalanced unpin of version {v}"
+        if n == 1:
+            del self._pins[v]
+        else:
+            self._pins[v] = n - 1
+        self.gc_versions()
+
+    def pinned_versions(self) -> dict[int, int]:
+        """version -> pin count (snapshot copy, for stats/tests)."""
+        return dict(self._pins)
+
+    def gc_versions(self) -> None:
+        """Drop retired (non-current) versions nobody has pinned."""
+        for v in [v for v in self.history
+                  if v != self.version and not self._pins.get(v)]:
+            del self.history[v]
+
+    # ------------------------------------------------- split/merge planning
+    def spawn_index(self) -> Aulid:
+        """A fresh empty shard index with the resident shards' config — the
+        build target of a split/merge (custom ``dev_factory`` devices from
+        bulkload are not reproduced; split products use plain block devices
+        of the same block size)."""
+        cfg = self.shards[0].cfg
+        return Aulid(BlockDevice(block_bytes=cfg.block_bytes), cfg=cfg)
+
+    def shard_items(self, s: int) -> tuple[np.ndarray, np.ndarray]:
+        """Sorted (keys, payloads) resident in shard ``s``'s host index."""
+        items = self.shards[s].scan(0, self.shards[s].n_items)
+        keys = np.fromiter((k for k, _ in items), dtype=np.uint64,
+                           count=len(items))
+        pays = np.fromiter((p for _, p in items), dtype=np.uint64,
+                           count=len(items))
+        return keys, pays
+
+    def plan_split(self, s: int) -> Optional[int]:
+        """The split key for shard ``s``: the median resident key, chosen so
+        both halves are non-empty (left takes keys <= split_key).  Returns
+        None when the shard has fewer than two distinct keys."""
+        keys, _ = self.shard_items(s)
+        if len(keys) < 2:
+            return None
+        split_key = int(keys[len(keys) // 2 - 1])
+        if split_key >= int(keys[-1]):   # all keys in the left half
+            below = np.searchsorted(keys, np.uint64(split_key), side="left")
+            if below == 0:
+                return None              # fewer than two distinct keys
+            split_key = int(keys[below - 1])
+        return split_key
+
+    def apply_split(self, s: int, split_key: int,
+                    left: Aulid, right: Aulid) -> int:
+        """Install a completed split of shard ``s`` at ``split_key`` (left
+        takes keys <= split_key): replaces the shard with ``left``/``right``,
+        inserts the new boundary, and bumps the version (retired bounds stay
+        in ``history`` while pinned).  Returns the new version."""
+        assert 0 <= s < self.num_shards
+        assert s >= len(self.bounds) or split_key < int(self.bounds[s]), \
+            "split key must fall strictly inside the shard's range"
+        self.shards[s:s + 1] = [left, right]
+        new_bounds = np.insert(self.bounds, s, np.uint64(int(split_key)))
+        return self._install_bounds(new_bounds)
+
+    def apply_merge(self, s: int, merged: Aulid) -> int:
+        """Install a completed merge of shards ``s`` and ``s+1`` into
+        ``merged``: drops the boundary between them and bumps the version.
+        Returns the new version."""
+        assert 0 <= s < self.num_shards - 1, "merge needs a right neighbor"
+        self.shards[s:s + 2] = [merged]
+        return self._install_bounds(np.delete(self.bounds, s))
+
+    def _install_bounds(self, new_bounds: np.ndarray) -> int:
+        self.bounds = np.asarray(new_bounds, dtype=np.uint64)
+        self.version += 1
+        self.history[self.version] = self.bounds
+        self.gc_versions()
+        return self.version
 
     # ------------------------------------------------------------ operations
     def insert(self, key: int, payload: int) -> None:
@@ -76,6 +197,16 @@ class RangePartition:
         return out[:count]
 
     def check_invariants(self) -> None:
+        assert len(self.bounds) == self.num_shards - 1
+        assert np.all(self.bounds[1:] > self.bounds[:-1]), \
+            "bounds must be strictly increasing"
+        assert self.history[self.version] is self.bounds, \
+            "current version must map to the live bounds"
+        for v in self._pins:
+            assert v in self.history and self._pins[v] > 0
+        for v in self.history:
+            assert v == self.version or self._pins.get(v, 0) > 0, \
+                f"retired version {v} survived GC without pins"
         prev_hi = -1
         for s, sh in enumerate(self.shards):
             sh.check_invariants()

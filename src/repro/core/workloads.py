@@ -9,8 +9,11 @@ GENOME 585, OSM 4106).  Hardness ordering C1≈C2 << C3 << C4 is preserved;
 absolute sizes are scaled by ``--scale`` (CPU container vs the paper's HDD).
 
 Workloads — W1 Lookup-Only, W2 Scan-Only (range 100), W3 Write-Only,
-W4 Read-Heavy (90/10), W5 Balanced (50/50), W6 Write-Heavy (10/90), plus the
-Append-Only workload of §5.4.2 (Table 6).
+W4 Read-Heavy (90/10), W5 Balanced (50/50), W6 Write-Heavy (10/90), the
+Append-Only workload of §5.4.2 (Table 6), plus the Shifting-Hotspot drift
+pattern from "Are Updatable Learned Indexes Ready?" (PAPERS.md): a windowed
+zipf insert hotspot whose center advances over the keyspace — the load that
+drives the online-repartitioning gate (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -88,6 +91,42 @@ def make_dataset(name: str, n: int, seed: int = 0) -> np.ndarray:
 def payloads_for(keys: np.ndarray) -> np.ndarray:
     """The paper's payload: key + 1 (§5.1.2)."""
     return keys + np.uint64(1)
+
+
+def shifting_hotspot_keys(n_ops: int, lo: int, hi: int, *,
+                          window_frac: float = 0.05, zipf_a: float = 1.3,
+                          sweeps: float = 1.0,
+                          rng: "np.random.Generator | None" = None,
+                          seed: int = 0) -> np.ndarray:
+    """Insert keys for the shifting-hotspot drift pattern (DESIGN.md §12):
+    op ``i`` draws a key zipf-distanced from a hotspot *center* that advances
+    linearly from ``lo`` to ``hi`` (``sweeps`` full passes over the keyspace).
+
+    The zipf weights are bounded to a window of ``window_frac`` of the
+    keyspace (plain ``rng.zipf`` is unbounded): distance rank ``r`` in
+    ``[1, W]`` has probability ``∝ 1/r^zipf_a``, sampled by inverse-CDF so
+    the whole draw is vectorized and **deterministic per seed** — the
+    property the workload tests pin down.  Returned keys are clipped to
+    ``[lo, hi]`` and never collide with the u64-max sentinel.  The rank
+    table is capped at ``2**22`` entries so sparse u64 keyspans (where
+    ``span * window_frac`` alone would be billions of ranks) stay cheap —
+    the window only ever shrinks, never widens."""
+    assert hi > lo
+    rng = np.random.default_rng(seed) if rng is None else rng
+    n_ops = int(n_ops)
+    span = hi - lo
+    window = max(min(int(span * window_frac), 1 << 22), 2)
+    # inverse-CDF zipf over the bounded window
+    w = 1.0 / np.power(np.arange(1, window + 1, dtype=np.float64), zipf_a)
+    cdf = np.cumsum(w) / np.sum(w)
+    ranks = np.searchsorted(cdf, rng.random(n_ops), side="left")
+    sign = rng.choice(np.array([-1, 1], dtype=np.int64), n_ops)
+    # center advances over the keyspace: frac(i/n * sweeps) in [0, 1)
+    phase = np.modf(np.arange(n_ops, dtype=np.float64) / max(n_ops, 1)
+                    * float(sweeps))[0]
+    centers = lo + (phase * span).astype(np.int64)
+    out = centers + sign * ranks
+    return np.clip(out, lo, hi).astype(np.uint64)
 
 
 # --------------------------------------------------------------------- workloads
@@ -178,6 +217,17 @@ def run_workload(index: OrderedIndex, workload: str, keys: np.ndarray,
         ops = [(1, int(k), int(k) + 1) for k in tail]
         return _run(index, workload, dataset, ops, measure_lat)
 
+    if workload == "shifting_hotspot":
+        # drift pattern of "Are Updatable Learned Indexes Ready?" (PAPERS.md):
+        # inserts concentrate in a zipf-weighted window whose center advances
+        # over the whole keyspace, so every range gets its turn being hot
+        half = keys[: n // 2]
+        index.bulkload(half, payloads_for(half))
+        qk = shifting_hotspot_keys(n_queries, int(keys[0]), int(keys[-1]),
+                                   rng=rng)
+        ops = [(1, int(k), int(k) + 1) for k in qk]
+        return _run(index, workload, dataset, ops, measure_lat)
+
     # W3-W6: initial index on a random 50% sample; remaining keys are inserted
     # (scaled version of the paper's 10M init + 10M ops protocol).
     perm = rng.permutation(n)
@@ -208,4 +258,5 @@ def run_workload(index: OrderedIndex, workload: str, keys: np.ndarray,
 
 
 WORKLOADS = ["w1_lookup", "w2_scan", "w3_write", "w4_read_heavy",
-             "w5_balanced", "w6_write_heavy", "append_only"]
+             "w5_balanced", "w6_write_heavy", "append_only",
+             "shifting_hotspot"]

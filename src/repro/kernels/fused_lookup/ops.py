@@ -185,7 +185,13 @@ def _cached(cache: OrderedDict, src: dict, fingerprint: tuple, build,
 
 
 def _operands(arrs: dict) -> FusedOperands:
-    fp = tuple(id(arrs[f]) for f in _FP_FIELDS if f in arrs)
+    # member-array identities + the boundary-table version BY VALUE
+    # (DESIGN.md §12): every split/merge builds a fresh pack with a fresh
+    # snap_token, but the version term also hard-invalidates unstamped
+    # (identity-keyed) dicts whose bounds were swapped under them — the
+    # in-kernel route must only ever read the pinned version's bounds
+    fp = tuple(id(arrs[f]) for f in _FP_FIELDS if f in arrs) \
+        + (arrs.get("bounds_version", 0),)
     return _cached(_OPERANDS, arrs, fp, FusedOperands,
                    token=arrs.get("snap_token"))
 

@@ -166,16 +166,19 @@ class IndexShard:
     def needs_compaction(self, gamma: float) -> bool:
         return len(self.overlay) >= gamma * max(self.idx.n_items, 1)
 
-    def freeze(self) -> DeltaOverlay:
+    def freeze(self, count: bool = True) -> DeltaOverlay:
         """Freeze the overlay for a double-buffered compaction (DESIGN.md
         §11): reads keep merging it over the old snapshot, writes move to a
         fresh spawn, and the host index is read-only until ``finish_swap``.
         Counted as this shard's compaction NOW (at the decision point), so
-        compaction counters are deterministic across sync/async modes."""
+        compaction counters are deterministic across sync/async modes.
+        Repartition builds reuse the same freeze window but are counted by
+        the engine's split/merge counters instead (``count=False``)."""
         assert self.frozen_overlay is None, "compaction already in flight"
         self.frozen_overlay = self.overlay
         self.overlay = self.frozen_overlay.spawn_empty()
-        self.compactions += 1
+        if count:
+            self.compactions += 1
         return self.frozen_overlay
 
     def finish_swap(self, new_di: DeviceIndex) -> None:
@@ -185,6 +188,24 @@ class IndexShard:
         already serves them to reads, so the served view never moves."""
         self.di = new_di
         self.frozen_overlay = None
+        pending, self.pending = self.pending, []
+        for op, key, payload in pending:
+            if op == "insert":
+                if not self.idx.update(key, payload):
+                    self.idx.insert(key, payload)
+            else:
+                self.idx.delete(key)
+
+    def abort_swap(self) -> None:
+        """Roll back a freeze whose background build FAILED (DESIGN.md §12):
+        the old mirror stays live, the pending log is replayed into the host
+        index (no lost writes), and the frozen overlay's entries are folded
+        back under the live overlay — they are in the host index but not in
+        the old mirror, so they must stay overlay-visible until a later
+        compaction succeeds.  The served view never moves."""
+        assert self.frozen_overlay is not None, "no build in flight"
+        frozen, self.frozen_overlay = self.frozen_overlay, None
+        self.overlay.merge_under(frozen)
         pending, self.pending = self.pending, []
         for op, key, payload in pending:
             if op == "insert":
@@ -250,6 +271,24 @@ class BaseIndexEngine:
         self.read_batch_sizes: list[int] = []
         self.serve_seconds = 0.0
         self.step_seconds: list[float] = []   # per-step latency (p99 source)
+        # first-seen read specializations — static args (count bucket /
+        # ov_bound / height) PLUS every device operand's shape, i.e. the
+        # jit cache key: each new combo compiles a fresh read variant, so
+        # benchmarks can tag the steps that paid a compile instead of
+        # guessing from latency.  A restack invalidates every combo (pool
+        # shapes changed); a swap install re-uses them (shapes kept).
+        self._read_shapes: set[tuple] = set()
+        self.read_shape_misses = 0
+
+    def _note_read_shape(self, *statics) -> None:
+        sig = tuple(sorted(
+            (name, k, tuple(v.shape))
+            for name, ops in (("snap", self._snap()), ("ov", self._ov()))
+            for k, v in ops.items() if hasattr(v, "shape")))
+        key = statics + (self._height(), sig)
+        if key not in self._read_shapes:
+            self._read_shapes.add(key)
+            self.read_shape_misses += 1
 
     # ------------------------------------------------------------- admission
     def submit(self, op: str, key: int, payload: int = 0,
@@ -281,6 +320,11 @@ class BaseIndexEngine:
         timer (the swap cost is real serving cost), never mid-batch — so a
         read batch only ever sees one epoch's pools."""
 
+    def _end_step(self) -> None:
+        """Step-teardown hook, run after the step's last read batch: engines
+        with a versioned boundary table release the version they pinned in
+        ``_begin_step`` here (DESIGN.md §12)."""
+
     def _snap(self) -> dict:
         """Device snapshot operand of the read entry points."""
         raise NotImplementedError
@@ -307,6 +351,7 @@ class BaseIndexEngine:
     def _serve_gets(self, gets: list[IndexRequest]) -> None:
         import jax.numpy as jnp
         q = jnp.asarray(pad_queries([r.key for r in gets]))
+        self._note_read_shape("get", q.shape[0])
         pay, found, _ = self._lookup(self._snap(), self._ov(), q,
                                      height=self._height())
         pay = np.asarray(pay)
@@ -327,6 +372,7 @@ class BaseIndexEngine:
         ov_bound = next_pow2(max(self._overlay_live(), MIN_SCAN_BUCKET))
         for bucket, grp in sorted(by_bucket.items()):
             q = jnp.asarray(pad_queries([r.key for r in grp]))
+            self._note_read_shape("scan", q.shape[0], bucket, ov_bound)
             ks, ps, valid = self._scan(self._snap(), self._ov(), q,
                                        count=bucket, height=self._height(),
                                        ov_bound=ov_bound)
@@ -358,6 +404,7 @@ class BaseIndexEngine:
             self._serve_gets(gets)
         if scans:
             self._serve_scans(scans)
+        self._end_step()
         self.steps += 1
         dt = time.perf_counter() - t0
         self.serve_seconds += dt
@@ -383,6 +430,7 @@ class BaseIndexEngine:
                                  if self.serve_seconds else 0.0),
             "p99_step_s": (float(np.percentile(self.step_seconds, 99))
                            if self.step_seconds else 0.0),
+            "read_shape_misses": self.read_shape_misses,
         }
 
 
@@ -414,6 +462,7 @@ class IndexEngine(BaseIndexEngine):
         self.auto_compact = auto_compact
         self.async_compact = async_compact
         self.swaps = 0
+        self.failed_swaps = 0
         self._inflight = None
         self.shard = IndexShard.wrap(idx, gamma)
 
@@ -482,8 +531,16 @@ class IndexEngine(BaseIndexEngine):
         fut = self._inflight
         if fut is None or (not block and not fut.done()):
             return
-        di, arrs = fut.result()
         self._inflight = None
+        try:
+            di, arrs = fut.result()
+        except Exception:
+            # failed build: old mirror stays live, pending replays, frozen
+            # overlay folds back under live (DESIGN.md §12) — no lost writes
+            self.shard.abort_swap()
+            self.shard.refresh_overlay_arrays()
+            self.failed_swaps += 1
+            return
         self.shard.finish_swap(di)
         self.shard.arrs = arrs
         self.shard.refresh_overlay_arrays()   # frozen retired: live-only pack
@@ -523,6 +580,7 @@ class IndexEngine(BaseIndexEngine):
             "overlay_len": len(self.overlay),
             "compactions": self.compactions,
             "swaps": self.swaps,
+            "failed_swaps": self.failed_swaps,
             "inflight": int(self._inflight is not None),
             "mirror_refreshes": self.di.refreshes,
             "mirror_full_builds": self.di.full_builds,

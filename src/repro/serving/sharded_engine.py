@@ -27,15 +27,28 @@ with ``async_compact=True`` (the default) a shard crossing its gamma
 threshold freezes its overlay, builds + uploads its refreshed mirror slice on
 a background thread, and installs it at a later step boundary while reads
 keep serving the old epoch merged with the frozen overlay.
+
+``repartition=True`` adds **online split/merge** under drift (DESIGN.md §12):
+a load monitor sampled in ``_begin_step`` watches per-shard key counts and
+insert rates; when the max/min shard-size ratio crosses ``split_ratio`` the
+outlier shard is split at its median key (or an undersized shard merged into
+its smaller neighbor) through the same freeze→background-build→atomic-swap
+path as a compaction.  The stacked pools pad their leading shard axis
+pow2+headroom (placeholder mirrors + UINT64_MAX bounds pads), so a
+split/merge within capacity changes no jitted read shape; the boundary table
+is versioned (``RangePartition.pin``/``unpin``) so an in-flight step routes
+and scans entirely on the version it began on.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from ..core.delta_overlay import UINT64_MAX, merge_overlays, next_pow2
-from ..core.device_index import (install_shard_slices, pad_shard_slices,
-                                 rechain_stacked, refresh_device_index,
-                                 restack_shard, stack_device_indexes)
+from ..core.delta_overlay import (DeltaOverlay, UINT64_MAX, merge_overlays,
+                                  next_pow2)
+from ..core.device_index import (build_device_index, install_shard_slices,
+                                 pad_shard_slices, rechain_stacked,
+                                 refresh_device_index, restack_shard,
+                                 stack_device_indexes, stacked_pool_caps)
 from ..core.partition import RangePartition
 from .index_engine import (BaseIndexEngine, IndexRequest, IndexShard,
                            compaction_executor)
@@ -46,7 +59,9 @@ class ShardedIndexEngine(BaseIndexEngine):
 
     def __init__(self, part: RangePartition, *, gamma: float = 0.05,
                  auto_compact: bool = True, backend: str = "auto",
-                 async_compact: bool = True):
+                 async_compact: bool = True, repartition: bool = False,
+                 split_ratio: float = 4.0, min_split_items: int = 128,
+                 repartition_check_every: int = 1):
         from ..core.lookup import (lookup_backend_fns, resolve_read_backend,
                                    scan_batch_sharded_overlay,
                                    stacked_device_arrays,
@@ -63,11 +78,25 @@ class ShardedIndexEngine(BaseIndexEngine):
         self.gamma = gamma
         self.auto_compact = auto_compact
         self.async_compact = async_compact
+        # online repartitioning policy (DESIGN.md §12)
+        self.repartition = repartition
+        self.split_ratio = float(split_ratio)
+        self.min_split_items = int(min_split_items)
+        self.repartition_check_every = max(1, int(repartition_check_every))
+        self.splits = 0
+        self.merges = 0
+        self.failed_swaps = 0        # compaction builds that raised
+        self.repart_failures = 0     # split/merge builds that raised
+        self._repart_inflight = None  # (kind, shard, pinned version, Future)
+        self._step_version = None     # boundary version pinned by this step
+        self._min_slots = 0           # shard-slot capacity ratchet
+        self._write_counts = [0] * part.num_shards  # inserts since sample
         self.shards = [IndexShard.wrap(idx, gamma, with_arrays=False)
                        for idx in part.shards]
-        self.sdi = stack_device_indexes([sh.di for sh in self.shards],
-                                        part.bounds)
-        self.stk = self._stacked_device_arrays(self.sdi)
+        self.sdi = stack_device_indexes(
+            [sh.di for sh in self.shards], part.bounds,
+            min_shards=self._shard_slots(len(self.shards)))
+        self.stk = self._stacked_device_arrays(self.sdi, part.version)
         # merged-pack capacity floor ~= sum of shard thresholds: one jit
         # shape for the overlay pack across the shards' whole lifetime
         self._ov_floor = next_pow2(
@@ -94,10 +123,13 @@ class ShardedIndexEngine(BaseIndexEngine):
 
     # ------------------------------------------------------------ write path
     def _apply_write(self, req: IndexRequest) -> None:
-        sh = self.shards[self.part.shard_of(req.key)]
+        s = self.part.shard_of(req.key)
+        sh = self.shards[s]
         req.result = sh.apply_write(req.op, req.key, req.payload)
         req.done = True
         self.writes_applied += 1
+        if req.op == "insert":
+            self._write_counts[s] += 1   # load-monitor insert-rate window
 
     def _after_writes(self) -> None:
         if self.auto_compact:
@@ -110,6 +142,11 @@ class ShardedIndexEngine(BaseIndexEngine):
         inline; double-buffered mode (default) freezes each shard's overlay
         and hands the build+upload to a background thread (DESIGN.md §11) —
         one build in flight per shard."""
+        if self._repart_inflight is not None:
+            # a repartition owns the maintenance window: shard ids shift at
+            # its install, so no compaction may start (or restack) under it —
+            # overlays keep absorbing writes and compact after the install
+            return
         changed = [s for s, sh in enumerate(self.shards)
                    if sh.needs_compaction(self.gamma)
                    and s not in self._inflight]
@@ -150,49 +187,88 @@ class ShardedIndexEngine(BaseIndexEngine):
         deferred host writes, scatter the pre-uploaded device slices into the
         stacked pools — and rechain once.  A build whose slices no longer fit
         the current stack (concurrent full re-stack, or the shard outgrew its
-        pad) falls back to the synchronous re-stack path."""
-        if not self._inflight:
-            return
-        ready = []
-        for s in list(self._inflight):
-            fut = self._inflight[s]
+        pad) falls back to the synchronous re-stack path.  A build that
+        RAISED rolls its shard back via ``abort_swap`` (old epoch stays live,
+        pending log replays — no lost writes, DESIGN.md §12).  Finished
+        split/merge builds install last (``_install_repart``)."""
+        touched = False
+        if self._inflight:
+            ready = []
+            for s in list(self._inflight):
+                fut = self._inflight[s]
+                if block or fut.done():
+                    del self._inflight[s]
+                    try:
+                        ready.append(fut.result())
+                    except Exception:
+                        self.shards[s].abort_swap()
+                        self.failed_swaps += 1
+                        touched = True
+            if ready:
+                changed, dev_slices, need_full = [], {}, False
+                for s, di, sdi_ref, slices, dev in ready:
+                    self.shards[s].finish_swap(di)
+                    changed.append(s)
+                    if (sdi_ref is self.sdi and slices is not None
+                            and all(dev[f].shape
+                                    == getattr(self.sdi, f).shape[1:]
+                                    for f in dev)):
+                        install_shard_slices(self.sdi, s, di, slices)
+                        dev_slices[s] = dev
+                    else:
+                        self.sdi.dis[s] = di
+                        if not restack_shard(self.sdi, s, rechain=False):
+                            need_full = True
+                self.swaps += len(changed)
+                if need_full:
+                    self._full_restack()
+                else:
+                    rechain_stacked(self.sdi)   # once, after all installs
+                    self.stk = self._update_stacked_shard(
+                        self.stk, self.sdi, changed, dev_slices=dev_slices)
+                touched = True
+        if self._repart_inflight is not None:
+            fut = self._repart_inflight[-1]
             if block or fut.done():
-                del self._inflight[s]
-                ready.append(fut.result())
-        if not ready:
-            return
-        changed, dev_slices, need_full = [], {}, False
-        for s, di, sdi_ref, slices, dev in ready:
-            self.shards[s].finish_swap(di)
-            changed.append(s)
-            if (sdi_ref is self.sdi and slices is not None
-                    and all(dev[f].shape == getattr(self.sdi, f).shape[1:]
-                            for f in dev)):
-                install_shard_slices(self.sdi, s, di, slices)
-                dev_slices[s] = dev
-            else:
-                self.sdi.dis[s] = di
-                if not restack_shard(self.sdi, s, rechain=False):
-                    need_full = True
-        self.swaps += len(changed)
-        if need_full:
-            self.sdi = stack_device_indexes([sh.di for sh in self.shards],
-                                            self.part.bounds)
-            self.stk = self._stacked_device_arrays(self.sdi)
-            self.restacks += 1
-        else:
-            rechain_stacked(self.sdi)   # once, after all installs
-            self.stk = self._update_stacked_shard(self.stk, self.sdi, changed,
-                                                  dev_slices=dev_slices)
-        # frozen overlays retired -> merged pack must drop their entries
-        self.ov_arrs = self._merged_overlay_pack()
+                self._install_repart()
+                touched = True
+        if touched:
+            # frozen overlays retired / shard layout changed -> rebuild pack
+            self.ov_arrs = self._merged_overlay_pack()
 
     def _begin_step(self) -> None:
         self._install_ready(block=False)
+        if self.repartition and self.steps % self.repartition_check_every == 0:
+            self._maybe_repartition()
+        # pin the boundary-table version this step routes and scans on
+        # (DESIGN.md §12); released in _end_step once the last batch served
+        self._step_version = self.part.pin()
+
+    def _end_step(self) -> None:
+        if self._step_version is not None:
+            self.part.unpin(self._step_version)
+            self._step_version = None
 
     def drain_compactions(self) -> None:
-        """Block until every in-flight background compaction is installed."""
+        """Block until every in-flight background build (compaction or
+        split/merge) is installed."""
         self._install_ready(block=True)
+
+    def _full_restack(self) -> None:
+        self.sdi = stack_device_indexes(
+            [sh.di for sh in self.shards], self.part.bounds,
+            min_shards=self._shard_slots(len(self.shards)),
+            min_caps=self._pool_caps())
+        self.stk = self._stacked_device_arrays(self.sdi, self.part.version)
+        self.restacks += 1
+
+    def _pool_caps(self):
+        """Pool-capacity ratchet floor for rebuilt stacks (DESIGN.md §12):
+        with repartitioning on, a split/merge install (or restack) never
+        SHRINKS a jitted read shape — shapes only change when a pool
+        genuinely outgrows its pad.  None (exact fit) otherwise, preserving
+        the frozen-partition engine's layout bit-for-bit."""
+        return stacked_pool_caps(self.sdi) if self.repartition else None
 
     def _refresh_stack(self, changed: list[int]) -> None:
         for s in changed:
@@ -202,10 +278,246 @@ class ShardedIndexEngine(BaseIndexEngine):
             rechain_stacked(self.sdi)   # once, after all re-pads
             self.stk = self._update_stacked_shard(self.stk, self.sdi, changed)
         else:   # a shard outgrew its padded pool capacity: re-stack all
-            self.sdi = stack_device_indexes([sh.di for sh in self.shards],
-                                            self.part.bounds)
-            self.stk = self._stacked_device_arrays(self.sdi)
-            self.restacks += 1
+            self._full_restack()
+
+    # --------------------------------------------------- online repartitioning
+    def _shard_slots(self, n: int) -> int:
+        """Padded shard-slot capacity for ``n`` live shards: pow2 above 25%
+        headroom, ratcheted so it never shrinks — splits/merges within
+        capacity change no stacked shape and therefore trigger no read-path
+        recompile (DESIGN.md §12).  0 (exact-fit) when repartitioning is
+        off, preserving the frozen-partition engine's layout bit-for-bit."""
+        if not self.repartition:
+            return 0
+        self._min_slots = max(self._min_slots,
+                              next_pow2(n + max(n // 4, 1)))
+        return self._min_slots
+
+    def _maybe_repartition(self) -> None:
+        """Load monitor + trigger policy, sampled in ``_begin_step``
+        (DESIGN.md §12): when the max/min shard-size ratio crosses
+        ``split_ratio``, split the oversized shard at its median key if IT is
+        the outlier from the mean (sustained drift feeding one shard), else
+        merge the undersized shard into its smaller neighbor (a drained
+        range).  The insert-rate window breaks size ties toward the shard
+        the drift is feeding.  One repartition in flight at a time, and
+        never concurrently with compaction builds (shard ids shift)."""
+        if self._repart_inflight is not None or self._inflight:
+            return
+        sizes = [sh.idx.n_items for sh in self.shards]
+        rates, self._write_counts = self._write_counts, [0] * len(sizes)
+        mx, mn = max(sizes), min(sizes)
+        if mx <= self.split_ratio * max(mn, 1):
+            return
+        mean = sum(sizes) / len(sizes)
+        if mx / max(mean, 1.0) >= mean / max(mn, 1):
+            s = max(range(len(sizes)), key=lambda i: (sizes[i], rates[i]))
+            if sizes[s] >= 2 * self.min_split_items:
+                self.request_split(s)
+        elif len(self.shards) > 1:
+            s = min(range(len(sizes)), key=lambda i: (sizes[i], -rates[i]))
+            if s == len(sizes) - 1 or (s > 0 and sizes[s - 1] < sizes[s + 1]):
+                s -= 1               # merge with the smaller neighbor
+            self.request_merge(s)
+
+    def request_split(self, s: int, split_key: int | None = None) -> bool:
+        """Begin an online split of shard ``s`` (public for tests and forced
+        repartitions).  Async mode freezes the shard and builds the
+        post-split stacked mirror on a background thread; sync mode rebuilds
+        inline.  Returns False when it cannot start (a repartition or
+        compaction already in flight, or no valid split key)."""
+        if self._repart_inflight is not None or self._inflight:
+            return False
+        if self.shards[s].frozen_overlay is not None:
+            return False
+        if split_key is None:
+            split_key = self.part.plan_split(s)
+        if split_key is None:
+            return False
+        if not self.async_compact:
+            self._split_sync(s, int(split_key))
+            return True
+        self.shards[s].freeze(count=False)
+        ver = self.part.pin()
+        fut = compaction_executor().submit(
+            self._split_job, s, int(split_key), self.sdi, self.sdi.epoch)
+        self._repart_inflight = ("split", s, ver, fut)
+        return True
+
+    def request_merge(self, s: int) -> bool:
+        """Begin an online merge of shards ``s`` and ``s+1`` (the symmetric
+        case of :meth:`request_split`)."""
+        if self._repart_inflight is not None or self._inflight:
+            return False
+        if not 0 <= s < len(self.shards) - 1:
+            return False
+        if (self.shards[s].frozen_overlay is not None
+                or self.shards[s + 1].frozen_overlay is not None):
+            return False
+        if not self.async_compact:
+            self._merge_sync(s)
+            return True
+        self.shards[s].freeze(count=False)
+        self.shards[s + 1].freeze(count=False)
+        ver = self.part.pin()
+        fut = compaction_executor().submit(self._merge_job, s, self.sdi,
+                                           self.sdi.epoch)
+        self._repart_inflight = ("merge", s, ver, fut)
+        return True
+
+    def _new_shard(self, idx, di=None) -> IndexShard:
+        overlay = DeltaOverlay.for_threshold(
+            self.gamma * max(idx.n_items, 1))
+        return IndexShard(idx=idx, overlay=overlay,
+                          di=build_device_index(idx) if di is None else di)
+
+    def _build_split(self, s: int, split_key: int):
+        """Bulkload both halves of shard ``s`` from its (frozen) host items:
+        left takes keys <= split_key."""
+        keys, pays = self.part.shard_items(s)
+        cut = int(np.searchsorted(keys, np.uint64(split_key), side="right"))
+        left = self.part.spawn_index()
+        left.bulkload(keys[:cut], pays[:cut])
+        right = self.part.spawn_index()
+        right.bulkload(keys[cut:], pays[cut:])
+        return left, right
+
+    def _build_merged(self, s: int):
+        """Bulkload shards ``s`` and ``s+1``'s (frozen) host items into one
+        index — ranges are adjacent and ordered, so concatenation is sorted."""
+        ka, pa = self.part.shard_items(s)
+        kb, pb = self.part.shard_items(s + 1)
+        merged = self.part.spawn_index()
+        merged.bulkload(np.concatenate([ka, kb]), np.concatenate([pa, pb]))
+        return merged
+
+    def _split_job(self, s: int, split_key: int, sdi, epoch: int):
+        """Background build of a split (DESIGN.md §12): the two half indexes,
+        their mirrors, and the ENTIRE post-split padded stack + device pools
+        — all off the request path.  Reads only state the freeze window keeps
+        immutable (shard ``s``'s host index; cold mirrors — compaction is
+        paused while a repartition is in flight, asserted at install via the
+        captured ``sdi``/``epoch``)."""
+        left, right = self._build_split(s, split_key)
+        new_dis = [sh.di for sh in self.shards]
+        new_dis[s:s + 1] = [build_device_index(left),
+                            build_device_index(right)]
+        new_bounds = np.insert(self.part.bounds, s, np.uint64(split_key))
+        new_sdi = stack_device_indexes(
+            new_dis, new_bounds, min_shards=self._shard_slots(len(new_dis)),
+            min_caps=self._pool_caps())
+        new_stk = self._stacked_device_arrays(new_sdi)
+        return s, split_key, left, right, new_sdi, new_stk, sdi, epoch
+
+    def _merge_job(self, s: int, sdi, epoch: int):
+        """Background build of a merge (the symmetric case of
+        :meth:`_split_job`)."""
+        merged = self._build_merged(s)
+        new_dis = [sh.di for sh in self.shards]
+        new_dis[s:s + 2] = [build_device_index(merged)]
+        new_bounds = np.delete(self.part.bounds, s)
+        new_sdi = stack_device_indexes(
+            new_dis, new_bounds, min_shards=self._shard_slots(len(new_dis)),
+            min_caps=self._pool_caps())
+        new_stk = self._stacked_device_arrays(new_sdi)
+        return s, merged, new_sdi, new_stk, sdi, epoch
+
+    def _route_window_writes(self, old: IndexShard, targets) -> None:
+        """Carry a frozen shard's in-flight-window writes into its
+        replacement shards: live-overlay entries re-record into the target
+        overlays (the new mirrors were built BEFORE these writes, so reads
+        must keep seeing them overlay-first), and the pending log replays
+        into the new host indexes in arrival order — the exactness argument
+        for writes that straddle a split (DESIGN.md §12).  ``targets`` maps
+        a key to its replacement (IndexShard, host index) pair."""
+        for k, pay, tomb in old.overlay.range_items(0):
+            tsh, _ = targets(k)
+            if tomb:
+                tsh.overlay.record_delete(k)
+            else:
+                tsh.overlay.record_insert(k, pay)
+        for op, key, payload in old.pending:
+            _, tidx = targets(key)
+            if op == "insert":
+                if not tidx.update(key, payload):
+                    tidx.insert(key, payload)
+            else:
+                tidx.delete(key)
+
+    def _install_repart(self) -> None:
+        """Install a finished split/merge build between request batches
+        (DESIGN.md §12): adopt the pre-built stacked mirror + device pools
+        wholesale, route the frozen shards' window writes into the new
+        shards, bump the boundary-table version, and release the build's
+        pin.  A build that RAISED leaves the old version live — the frozen
+        windows roll back via ``abort_swap`` with the pending log intact."""
+        kind, s, ver, fut = self._repart_inflight
+        self._repart_inflight = None
+        try:
+            result = fut.result()
+        except Exception:
+            self.shards[s].abort_swap()
+            if kind == "merge":
+                self.shards[s + 1].abort_swap()
+            self.part.unpin(ver)
+            self.repart_failures += 1
+            return
+        if kind == "split":
+            s, split_key, left, right, new_sdi, new_stk, sdi_ref, epoch = \
+                result
+            assert sdi_ref is self.sdi and epoch == self.sdi.epoch, \
+                "stacked pools changed during a repartition flight"
+            old = self.shards[s]
+            lsh = self._new_shard(left, di=new_sdi.dis[s])
+            rsh = self._new_shard(right, di=new_sdi.dis[s + 1])
+            self._route_window_writes(
+                old, lambda k: (lsh, left) if k <= split_key else (rsh, right))
+            self.part.apply_split(s, split_key, left, right)
+            self.shards[s:s + 1] = [lsh, rsh]
+            self.splits += 1
+        else:
+            s, merged, new_sdi, new_stk, sdi_ref, epoch = result
+            assert sdi_ref is self.sdi and epoch == self.sdi.epoch, \
+                "stacked pools changed during a repartition flight"
+            msh = self._new_shard(merged, di=new_sdi.dis[s])
+            for old in (self.shards[s], self.shards[s + 1]):
+                self._route_window_writes(old, lambda k: (msh, merged))
+            self.part.apply_merge(s, merged)
+            self.shards[s:s + 2] = [msh]
+            self.merges += 1
+        self.part.unpin(ver)
+        self.sdi = new_sdi
+        new_stk["bounds_version"] = self.part.version
+        self.stk = new_stk
+        # shard ids shifted: reset the per-index caches/windows
+        self._write_counts = [0] * len(self.shards)
+        self._seg_cache.clear()
+        self._pack_sig = None
+
+    def _split_sync(self, s: int, split_key: int) -> None:
+        """Inline split (sync mode): overlays are already folded into the
+        host indexes (sync writes apply to both), so the rebuilt halves
+        absorb them and the replacement shards start with empty overlays —
+        request-for-request equivalent to the async path (DESIGN.md §12)."""
+        left, right = self._build_split(s, split_key)
+        self.part.apply_split(s, split_key, left, right)
+        self.shards[s:s + 1] = [self._new_shard(left), self._new_shard(right)]
+        self.splits += 1
+        self._after_repartition_sync()
+
+    def _merge_sync(self, s: int) -> None:
+        merged = self._build_merged(s)
+        self.part.apply_merge(s, merged)
+        self.shards[s:s + 2] = [self._new_shard(merged)]
+        self.merges += 1
+        self._after_repartition_sync()
+
+    def _after_repartition_sync(self) -> None:
+        self._write_counts = [0] * len(self.shards)
+        self._seg_cache.clear()
+        self._pack_sig = None
+        self._full_restack()
+        self.ov_arrs = self._merged_overlay_pack()
 
     # ----------------------------------------------------------- overlay pack
     def _overlay_sig(self) -> tuple:
@@ -292,6 +604,13 @@ class ShardedIndexEngine(BaseIndexEngine):
                                       for sh in self.shards),
             "full_restacks": self.restacks,
             "swaps": self.swaps,
+            "failed_swaps": self.failed_swaps,
             "inflight": len(self._inflight),
             "pack_skips": self.pack_skips,
+            "splits": self.splits,
+            "merges": self.merges,
+            "repart_failures": self.repart_failures,
+            "repart_inflight": int(self._repart_inflight is not None),
+            "boundary_version": self.part.version,
+            "shard_sizes": [sh.idx.n_items for sh in self.shards],
         }

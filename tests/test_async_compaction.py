@@ -10,6 +10,9 @@ whole steps: reads and writes are provably served from the old epoch + frozen
 overlay (and the deferred-write pending log) before the swap is allowed to
 land.  Shard-level tests pin down the deferred-write semantics (results
 computed overlay-first, pending replay at ``finish_swap``) without an engine.
+Fault-scenario tests inject build failures and require the abort path
+(``abort_swap``, DESIGN.md §12) to keep the old epoch live with no lost
+writes; the split/merge fault twins live in ``test_repartition.py``.
 """
 import concurrent.futures
 
@@ -41,7 +44,10 @@ class ManualExecutor:
     def pump(self):
         jobs, self.jobs = self.jobs, []
         for fut, fn, args in jobs:
-            fut.set_result(fn(*args))
+            try:
+                fut.set_result(fn(*args))
+            except Exception as exc:   # fault injection: deliver the failure
+                fut.set_exception(exc)
         return len(jobs)
 
 
@@ -257,6 +263,90 @@ class TestDeferredWrites:
             sh.compact()
         with pytest.raises(AssertionError):
             sh.freeze()                            # one build in flight
+
+
+class TestFailedBuilds:
+    """Fault scenarios (DESIGN.md §12): a background build that RAISES must
+    leave the served view on the old epoch with no lost writes — the frozen
+    overlay folds back under the live one (``abort_swap``), the pending log
+    replays into the host index — and a later successful build must fully
+    recover.  The oracle is the same sync twin as the storm suite."""
+
+    def test_sharded_failed_build_keeps_writes(self, manual_pool):
+        keys, sync = _sharded(0.02, async_compact=False)
+        _, dbuf = _sharded(0.02, async_compact=True)
+        rng = np.random.default_rng(7)
+        ins, dels = _storm_writes(sync, keys, rng)
+        storm = ([("insert", k, 7 * k) for k in ins]
+                 + [("delete", k) for k in dels])
+        inflight = ([("insert", int(k), 9) for k in rng.choice(keys, 8)]
+                    + [("delete", int(k)) for k in rng.choice(keys, 4)]
+                    + [("get", k) for k in dels]
+                    + [("get", k) for k in ins[:6]]
+                    + [("scan", int(k), 0, 16) for k in rng.choice(keys, 4)])
+        post = ([("get", int(k)) for k in rng.choice(keys, 16)]
+                + [("get", k) for k in ins[:6]]
+                + [("get", k) for k in dels]
+                + [("scan", int(k), 0, 16) for k in rng.choice(keys, 4)])
+
+        def boom(s, sdi):
+            raise RuntimeError("injected build failure")
+        dbuf._build_job = boom
+        assert _drive(sync, [storm, inflight]) == \
+            _drive(dbuf, [storm, inflight])
+        assert dbuf.stats()["inflight"] == dbuf.num_shards
+        del dbuf._build_job                    # restore the real build
+        manual_pool.pump()                     # delivers the injected failures
+        epoch0 = dbuf.sdi.epoch
+        # next step aborts every swap: old epoch stays live, pending replays
+        assert _drive(sync, [post]) == _drive(dbuf, [post])
+        st = dbuf.stats()
+        assert st["failed_swaps"] == dbuf.num_shards and st["swaps"] == 0
+        assert dbuf.sdi.epoch == epoch0        # served view never moved
+        assert all(not sh.pending for sh in dbuf.shards)
+        # one write step: the merged-back overlays still exceed gamma, so
+        # every shard re-freezes with the REAL build job — recovery must land
+        kick = [("insert", int(keys[0]), 4242)]
+        assert _drive(sync, [kick]) == _drive(dbuf, [kick])
+        manual_pool.pump()                     # recovery builds succeed
+        assert _drive(sync, [post]) == _drive(dbuf, [post])
+        st = dbuf.stats()
+        assert st["swaps"] == dbuf.num_shards
+        assert all(sh.frozen_overlay is None and not sh.pending
+                   for sh in dbuf.shards)
+
+    def test_monolithic_failed_build_keeps_writes(self, manual_pool):
+        keys, sync = _mono(0.02, async_compact=False)
+        _, dbuf = _mono(0.02, async_compact=True)
+        rng = np.random.default_rng(13)
+        need = int(0.02 * len(keys)) + 2
+        news = [int(k) for k in rng.integers(1, 2**48, need, dtype=np.uint64)]
+        dels = [int(k) for k in rng.choice(keys, 3, replace=False)]
+        storm = [("insert", k, 3 * k) for k in news] + \
+                [("delete", k) for k in dels]
+        inflight = ([("insert", news[0], 777), ("delete", news[1])]
+                    + [("get", k) for k in news[:4]]
+                    + [("get", k) for k in dels])
+        post = ([("get", k) for k in news[:4]] + [("get", k) for k in dels]
+                + [("scan", int(rng.choice(keys)), 0, 16)])
+
+        def boom():
+            raise RuntimeError("injected build failure")
+        dbuf._build_job = boom
+        assert _drive(sync, [storm, inflight]) == \
+            _drive(dbuf, [storm, inflight])
+        del dbuf._build_job
+        manual_pool.pump()
+        assert _drive(sync, [post]) == _drive(dbuf, [post])
+        st = dbuf.stats()
+        assert st["failed_swaps"] == 1 and st["swaps"] == 0
+        assert not dbuf.shard.pending          # replayed, not lost
+        kick = [("insert", int(keys[0]), 4242)]   # re-freeze via write step
+        assert _drive(sync, [kick]) == _drive(dbuf, [kick])
+        manual_pool.pump()                     # recovery build
+        assert _drive(sync, [post]) == _drive(dbuf, [post])
+        assert dbuf.stats()["swaps"] == 1
+        assert dbuf.shard.frozen_overlay is None
 
 
 class TestEpochInvariants:

@@ -1,11 +1,14 @@
-"""Checkpointing: round trip, atomicity, learned-manifest partial restore."""
+"""Checkpointing: round trip, atomicity, learned-manifest partial restore,
+serving-partition snapshots (DESIGN.md §12)."""
 import pathlib
 
 import numpy as np
 import pytest
 
-from repro.checkpoint import (load_manifest, restore_checkpoint,
-                              restore_params_subset, save_checkpoint)
+from repro.checkpoint import (latest_partition_step, load_manifest,
+                              load_partition, restore_checkpoint,
+                              restore_params_subset, save_checkpoint,
+                              save_partition)
 from repro.checkpoint.ckpt import latest_step
 
 
@@ -66,3 +69,61 @@ def test_elastic_restore_structs(tmp_path, tree):
     p = save_checkpoint(str(tmp_path), 2, tree)
     out, _ = restore_checkpoint(p, tree, shardings=None)
     assert out["opt"]["step"] == 7
+
+
+# ------------------------------------------------ RangePartition snapshots
+
+
+def _split_partition():
+    """A partition that has LIVED: one split applied, so its boundary
+    version is > 0 and its shard layout differs from any fresh bulkload."""
+    from repro.core import AulidConfig, partition_bulkload
+    from repro.core.workloads import make_dataset, payloads_for
+    keys = make_dataset("covid", 900, seed=1)
+    part = partition_bulkload(
+        keys, payloads_for(keys), 3,
+        cfg=AulidConfig(leaf_capacity=16, pa_classes=(4, 8),
+                        bt_child_capacity=15))
+    sk = part.plan_split(0)
+    ks, ps = part.shard_items(0)
+    cut = int(np.searchsorted(ks, np.uint64(sk), side="right"))
+    left, right = part.spawn_index(), part.spawn_index()
+    left.bulkload(ks[:cut], ps[:cut])
+    right.bulkload(ks[cut:], ps[cut:])
+    part.apply_split(0, sk, left, right)
+    return keys, part
+
+
+def test_partition_roundtrip_newest_version_zero_pins(tmp_path):
+    """Restore lands on the newest boundary version with zero pins, a
+    one-entry history, and routing + contents identical to the source."""
+    keys, part = _split_partition()
+    pin = part.pin()                      # in-flight state must NOT persist
+    save_partition(str(tmp_path), 4, part)
+    part.unpin(pin)
+    out = load_partition(str(tmp_path / "part_00000004"))
+    assert out.version == part.version > 0
+    assert out.pinned_versions() == {}
+    assert set(out.history) == {out.version}
+    assert out.num_shards == part.num_shards
+    np.testing.assert_array_equal(out.bounds, part.bounds)
+    assert out.shards[0].cfg == part.shards[0].cfg
+    probes = np.concatenate([keys[:: len(keys) // 50],
+                             [np.uint64(0), np.uint64(2**62)]])
+    for k in probes:
+        assert out.shard_of(int(k)) == part.shard_of(int(k))
+        assert out.lookup(int(k)) == part.lookup(int(k))
+    assert out.scan(int(keys[0]), 40) == part.scan(int(keys[0]), 40)
+
+
+def test_partition_latest_and_atomicity(tmp_path):
+    _, part = _split_partition()
+    assert latest_partition_step(str(tmp_path)) is None
+    save_partition(str(tmp_path), 1, part)
+    save_partition(str(tmp_path), 9, part)
+    assert latest_partition_step(str(tmp_path)) == 9
+    save_partition(str(tmp_path), 9, part)    # idempotent overwrite
+    assert latest_partition_step(str(tmp_path)) == 9
+    fake = tmp_path / "part_00000011"
+    fake.mkdir()                              # crashed mid-write: no json
+    assert latest_partition_step(str(tmp_path)) == 9

@@ -115,6 +115,99 @@ class TestRangePartition:
         assert part.lookup(int(keys[0])) is not None
 
 
+class TestVersionedBounds:
+    """Boundary-table versioning + split/merge planning (DESIGN.md §12)."""
+
+    def test_pin_unpin_gc(self):
+        keys, part = build_part(n=1_200, num_shards=3)
+        v0 = part.pin()
+        assert v0 == 0 and part.pinned_versions() == {0: 1}
+        part.pin(v0)                          # second pin on the same version
+        assert part.pinned_versions() == {0: 2}
+        split_key = part.plan_split(0)
+        left, right = _split_host(part, 0, split_key)
+        v1 = part.apply_split(0, split_key, left, right)
+        assert v1 == 1 and part.version == 1
+        # v0 retired but pinned twice: still in history, still routable
+        assert set(part.history) == {0, 1}
+        part.unpin(v0)
+        assert set(part.history) == {0, 1}    # one pin left
+        part.unpin(v0)
+        assert set(part.history) == {1}       # GC'd on last unpin
+        with pytest.raises(AssertionError):
+            part.unpin(v0)                    # unbalanced
+        with pytest.raises(AssertionError):
+            part.pin(v0)                      # retired versions unpinnable
+        part.check_invariants()
+
+    def test_apply_split_routing_and_versions(self):
+        keys, part = build_part(n=1_200, num_shards=3)
+        bounds0 = part.bounds.copy()
+        part.pin(0)
+        split_key = part.plan_split(1)
+        left, right = _split_host(part, 1, split_key)
+        part.apply_split(1, split_key, left, right)
+        assert part.num_shards == 4 and len(part.bounds) == 3
+        np.testing.assert_array_equal(part.bounds_at(0), bounds0)
+        # routing: keys <= split_key stay in the left half
+        assert part.shard_of(split_key) == 1
+        assert part.shard_of(split_key + 1) == 2
+        # every key still found through the partition
+        for k in keys[:: len(keys) // 40]:
+            assert part.lookup(int(k)) == int(k) + 1
+        part.check_invariants()
+        part.unpin(0)
+
+    def test_apply_merge_inverse_of_split(self):
+        keys, part = build_part(n=1_200, num_shards=3)
+        split_key = part.plan_split(0)
+        left, right = _split_host(part, 0, split_key)
+        part.apply_split(0, split_key, left, right)
+        ka, pa = part.shard_items(0)
+        kb, pb = part.shard_items(1)
+        merged = part.spawn_index()
+        merged.bulkload(np.concatenate([ka, kb]), np.concatenate([pa, pb]))
+        part.apply_merge(0, merged)
+        assert part.num_shards == 3 and part.version == 2
+        for k in keys[:: len(keys) // 40]:
+            assert part.lookup(int(k)) == int(k) + 1
+        part.check_invariants()
+
+    def test_plan_split_median_and_edge_cases(self):
+        keys, part = build_part(n=1_200, num_shards=2)
+        sk = part.plan_split(0)
+        k0, _ = part.shard_items(0)
+        n_left = int(np.searchsorted(k0, np.uint64(sk), side="right"))
+        assert 0 < n_left < len(k0), "both halves must be non-empty"
+        assert abs(n_left - len(k0) // 2) <= 1
+        # single-key and empty shards are unsplittable
+        one = partition_bulkload(np.array([7], dtype=np.uint64),
+                                 np.array([8], dtype=np.uint64), 1,
+                                 cfg=AulidConfig(**SMALL_GEOM))
+        assert one.plan_split(0) is None
+        dup = partition_bulkload(np.array([5] * 50, dtype=np.uint64),
+                                 np.array([6] * 50, dtype=np.uint64), 1,
+                                 cfg=AulidConfig(**SMALL_GEOM))
+        assert dup.plan_split(0) is None      # < 2 distinct keys
+
+    def test_split_key_must_fall_inside_range(self):
+        keys, part = build_part(n=1_200, num_shards=3)
+        bad = int(part.bounds[0])             # already the shard's upper bound
+        left, right = part.spawn_index(), part.spawn_index()
+        with pytest.raises(AssertionError):
+            part.apply_split(0, bad, left, right)
+
+
+def _split_host(part, s, split_key):
+    """Host-side split build (the engine's ``_build_split`` twin)."""
+    keys, pays = part.shard_items(s)
+    cut = int(np.searchsorted(keys, np.uint64(split_key), side="right"))
+    left, right = part.spawn_index(), part.spawn_index()
+    left.bulkload(keys[:cut], pays[:cut])
+    right.bulkload(keys[cut:], pays[cut:])
+    return left, right
+
+
 class TestStackedMirror:
     def test_stacked_shapes_uniform(self):
         keys, part, sdi, stk, height = pristine_stack()
@@ -181,6 +274,31 @@ class TestStackedMirror:
         pay0, found0, _, _ = device_lookup(stk, height, q)
         pay1, found1, _, _ = device_lookup(stk, height, q, qcap=32)
         assert (pay0 == pay1).all() and (found0 == found1).all()
+
+
+class TestPaddedShardSlots:
+    def test_min_shards_padding_routes_like_exact_fit(self):
+        """Placeholder shard slots (``min_shards``, DESIGN.md §12) are
+        routing-inert: their UINT64_MAX bounds entries send every real key
+        to a real shard, so lookups and cross-shard scans match the host
+        exactly and no query ever lands on a padding slot."""
+        keys, part = build_part(n=1_200, num_shards=3)
+        dis = [build_device_index(sh) for sh in part.shards]
+        sdi = stack_device_indexes(dis, part.bounds, min_shards=8)
+        stk = stacked_device_arrays(sdi)
+        height = max(sdi.max_inner_height, 3)
+        assert sdi.slot_tag.shape[0] == 8
+        assert len(sdi.bounds) == 7
+        q = np.concatenate([keys[:47], [np.uint64(2**62)]]).astype(np.uint64)
+        pay, found, _, sid = device_lookup(stk, height, q)
+        assert (sid <= 2).all(), "padding shards must never receive queries"
+        for i, k in enumerate(q):
+            exp = part.lookup(int(k))
+            assert (exp is None) == (not found[i]), int(k)
+            if exp is not None:
+                assert int(pay[i]) == exp
+        starts = keys[[5, 400, 1_100, len(keys) - 20]]
+        assert_scans_match(part, stk, height, starts)
 
 
 class TestRestack:

@@ -1,0 +1,452 @@
+"""Online shard repartitioning (split/merge) under drift — DESIGN.md §12.
+
+The acceptance oracle: an engine with ``repartition=True`` must answer ANY
+interleaving of get/insert/delete/scan requests exactly like a frozen-
+partition engine over the same data, even when splits and merges are forced
+mid-stream and their background builds span whole steps (hand-pumped
+executor, same clock-edge technique as ``test_async_compaction.py``).  The
+property-based form runs when ``hypothesis`` is installed; a seeded
+deterministic twin always runs.
+
+Fault scenarios: a split/merge build that RAISES must leave the old boundary
+version live, the old shards serving, and the in-flight window's writes
+intact (``abort_swap`` + pending replay); version pinning must keep a
+retired boundary table routable until its last pin drops, then GC it.
+"""
+import contextlib
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from test_async_compaction import ManualExecutor
+
+from repro.core import AulidConfig, partition_bulkload
+from repro.core.workloads import make_dataset, payloads_for
+from repro.serving import ShardedIndexEngine
+from repro.serving import index_engine as ie_mod
+
+SMALL_GEOM = dict(leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15)
+
+
+@contextlib.contextmanager
+def manual_pool_ctx():
+    """Hand-pumped replacement for the background build pool — usable from
+    inside @given bodies where function-scoped fixtures are off-limits."""
+    pool = ManualExecutor()
+    old = ie_mod._COMPACT_POOL
+    ie_mod._COMPACT_POOL = pool
+    try:
+        yield pool
+    finally:
+        ie_mod._COMPACT_POOL = old
+
+
+@pytest.fixture
+def manual_pool():
+    with manual_pool_ctx() as pool:
+        yield pool
+
+
+def _universe(keys, m=200):
+    """A fixed key universe mixing resident keys and fresh ones (inside and
+    beyond the loaded range) so deletes/gets hit earlier inserts."""
+    lo, hi = int(keys[0]), int(keys[-1])
+    fresh = np.linspace(lo + 7, hi + (hi - lo) // 4, m // 2).astype(np.uint64)
+    stride = max(len(keys) // (m // 2), 1)
+    return np.unique(np.concatenate([keys[::stride], fresh]))
+
+
+def _mk_repart(keys, pay, **kw):
+    part = partition_bulkload(keys, pay, 3, cfg=AulidConfig(**SMALL_GEOM))
+    kw.setdefault("split_ratio", 1e9)     # policy off: tests force explicitly
+    kw.setdefault("min_split_items", 16)
+    kw.setdefault("backend", "jnp")
+    return ShardedIndexEngine(part, gamma=0.05, repartition=True, **kw)
+
+
+def _mk_frozen(keys, pay, **kw):
+    part = partition_bulkload(keys, pay, 3, cfg=AulidConfig(**SMALL_GEOM))
+    return ShardedIndexEngine(part, gamma=0.05, backend="jnp", **kw)
+
+
+def _submit(eng, kind, k, payload):
+    if kind == 0:
+        return eng.get(k)
+    if kind == 1:
+        return eng.insert(k, payload)
+    if kind == 2:
+        return eng.delete(k)
+    return eng.scan(k, 12)
+
+
+def _check_drained(rep):
+    rep.part.check_invariants()
+    assert rep.part.pinned_versions() == {}
+    assert set(rep.part.history) == {rep.part.version}
+    assert rep.stats()["repart_inflight"] == 0
+
+
+def _run_equivalence(ops, oracle_factory=_mk_frozen):
+    """Drive ``ops`` (list of (kind, key_index, payload)) through a
+    repartitioning engine and an oracle engine in lockstep, forcing a split
+    (or merge) every other step so the build's in-flight window spans the
+    NEXT step's requests; returns (repart, oracle) for extra assertions."""
+    keys = make_dataset("covid", 600, seed=1)
+    pay = payloads_for(keys)
+    uni = _universe(keys)
+    with manual_pool_ctx() as pool:
+        rep = _mk_repart(keys, pay)
+        frz = oracle_factory(keys, pay)
+        pairs = []
+        chunks = [ops[i:i + 12] for i in range(0, len(ops), 12)]
+        for i, chunk in enumerate(chunks):
+            for kind, ki, payload in chunk:
+                k = int(uni[ki % len(uni)])
+                pairs.append((_submit(rep, kind, k, payload),
+                              _submit(frz, kind, k, payload)))
+            rep.step()
+            frz.step()
+            pool.pump()
+            if i % 2 == 1:
+                # park a split (odd phases) or merge (every 4th) whose window
+                # covers the next chunk's writes and reads
+                rep.drain_compactions()
+                sizes = [sh.idx.n_items for sh in rep.shards]
+                if i % 4 == 3 and len(sizes) > 2:
+                    s = min(range(len(sizes) - 1),
+                            key=lambda j: sizes[j] + sizes[j + 1])
+                    rep.request_merge(s)
+                else:
+                    rep.request_split(max(range(len(sizes)),
+                                          key=sizes.__getitem__))
+        pool.pump()
+        rep.drain_compactions()
+        frz.drain_compactions()
+        # full read sweep over the universe through both engines
+        sweep = [(rep.get(int(k)), frz.get(int(k))) for k in uni]
+        rep.step()
+        frz.step()
+        for m, s in pairs + sweep:
+            assert m.done and s.done
+            assert m.result == s.result, (m.op, m.key)
+        _check_drained(rep)
+        for sh in rep.shards:
+            sh.idx.check_invariants()
+    return rep, frz
+
+
+OPS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=3),       # op kind
+              st.integers(min_value=0, max_value=9_999),   # key-universe idx
+              st.integers(min_value=1, max_value=2**31)),  # payload
+    min_size=24, max_size=96)
+
+
+class TestRepartitionEquivalence:
+    @given(ops=OPS)
+    @settings(max_examples=6, deadline=None)
+    def test_property_equivalent_to_frozen_partition(self, ops):
+        """Property: on ARBITRARY mixed request streams, with splits/merges
+        forced mid-stream, the repartitioning engine is request-for-request
+        equivalent to a frozen-partition engine."""
+        _run_equivalence(ops)
+
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_seeded_equivalent_to_frozen_partition(self, seed):
+        """Deterministic twin of the property test (runs without
+        hypothesis): a seeded write-heavy mixed stream, ~10 steps, with
+        splits and merges forced on alternating steps."""
+        rng = np.random.default_rng(seed)
+        n = 120
+        kinds = rng.choice(4, size=n, p=[0.35, 0.40, 0.10, 0.15])
+        ops = [(int(k), int(rng.integers(0, 10_000)),
+                int(rng.integers(1, 2**31))) for k in kinds]
+        rep, _ = _run_equivalence(ops)
+        assert rep.splits >= 1, "stream must exercise at least one split"
+        assert rep.stats()["boundary_version"] == rep.splits + rep.merges
+
+    def test_fused_interpret_parity_across_split(self):
+        """The fused kernel's operand cache must not serve a pre-split pack
+        after the boundary table changes (the by-value ``bounds_version``
+        fingerprint): a fused_interpret engine answers like the jnp oracle
+        across forced splits."""
+        rng = np.random.default_rng(5)
+        kinds = rng.choice(4, size=72, p=[0.45, 0.40, 0.05, 0.10])
+        ops = [(int(k), int(rng.integers(0, 10_000)),
+                int(rng.integers(1, 2**31))) for k in kinds]
+        keys = make_dataset("covid", 600, seed=1)
+        pay = payloads_for(keys)
+        uni = _universe(keys)
+        with manual_pool_ctx() as pool:
+            fus = _mk_repart(keys, pay, backend="fused_interpret")
+            frz = _mk_frozen(keys, pay)
+            pairs = []
+            for i in range(0, len(ops), 12):
+                for kind, ki, payload in ops[i:i + 12]:
+                    k = int(uni[ki % len(uni)])
+                    pairs.append((_submit(fus, kind, k, payload),
+                                  _submit(frz, kind, k, payload)))
+                fus.step()
+                frz.step()
+                pool.pump()
+                fus.drain_compactions()
+                sizes = [sh.idx.n_items for sh in fus.shards]
+                fus.request_split(max(range(len(sizes)),
+                                      key=sizes.__getitem__))
+            pool.pump()
+            fus.drain_compactions()
+            frz.drain_compactions()
+            sweep = [(fus.get(int(k)), frz.get(int(k))) for k in uni[:64]]
+            fus.step()
+            frz.step()
+            for m, s in pairs + sweep:
+                assert m.result == s.result, (m.op, m.key)
+            assert fus.splits >= 1
+            assert fus.stk["bounds_version"] == fus.part.version > 0
+
+
+class TestForcedSplitMerge:
+    def _data(self):
+        keys = make_dataset("covid", 900, seed=1)
+        return keys, payloads_for(keys)
+
+    def test_async_split_lifecycle(self, manual_pool):
+        """Freeze -> background build -> install: the split's in-flight
+        window serves reads AND absorbs writes on the old shard; the install
+        adopts the pre-built stack, bumps the boundary version, and routes
+        the window's writes into the new shards."""
+        keys, pay = self._data()
+        rep, frz = _mk_repart(keys, pay), _mk_frozen(keys, pay)
+        sizes = [sh.idx.n_items for sh in rep.shards]
+        s = max(range(len(sizes)), key=sizes.__getitem__)
+        v0, s0 = rep.part.version, rep.num_shards
+        assert rep.request_split(s)
+        assert rep.part.pinned_versions() == {v0: 1}     # the build's pin
+        assert not rep.request_split(s), "one repartition in flight at a time"
+        # window step: writes route into the frozen shard's pending log
+        lo = 0 if s == 0 else int(rep.part.bounds[s - 1]) + 1
+        win = [("insert", lo + 3, 77), ("delete", int(keys[5])),
+               ("get", lo + 3), ("get", int(keys[5])),
+               ("scan", int(keys[0]), 0, 16)]
+        out_r = [rep.submit(*a) for a in win]
+        out_f = [frz.submit(*a) for a in win]
+        rep.step()
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        assert rep.num_shards == s0                       # not installed yet
+        manual_pool.pump()
+        post = [("get", lo + 3), ("get", int(keys[5])),
+                ("scan", int(keys[2]), 0, 16)]
+        out_r = [rep.submit(*a) for a in post]
+        out_f = [frz.submit(*a) for a in post]
+        rep.step()                                        # installs the split
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        st = rep.stats()
+        assert st["splits"] == 1 and rep.num_shards == s0 + 1
+        assert st["boundary_version"] == v0 + 1
+        assert rep.stk["bounds_version"] == v0 + 1
+        _check_drained(rep)
+
+    def test_async_merge_lifecycle(self, manual_pool):
+        keys, pay = self._data()
+        rep, frz = _mk_repart(keys, pay), _mk_frozen(keys, pay)
+        s0, v0 = rep.num_shards, rep.part.version
+        assert rep.request_merge(0)
+        win = [("insert", int(keys[1]) + 1, 5), ("get", int(keys[1])),
+               ("scan", int(keys[0]), 0, 16)]
+        out_r = [rep.submit(*a) for a in win]
+        out_f = [frz.submit(*a) for a in win]
+        rep.step()
+        frz.step()
+        manual_pool.pump()
+        post = [("get", int(keys[1]) + 1), ("get", int(keys[-1]))]
+        out_r += [rep.submit(*a) for a in post]
+        out_f += [frz.submit(*a) for a in post]
+        rep.step()
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        assert rep.merges == 1 and rep.num_shards == s0 - 1
+        assert rep.part.version == v0 + 1
+        _check_drained(rep)
+
+    def test_sync_matches_async_repartition(self, manual_pool):
+        """Sync-mode splits/merges (inline rebuild) answer exactly like the
+        async path on the same trace."""
+        keys, pay = self._data()
+        rng = np.random.default_rng(9)
+        uni = _universe(keys)
+        sync = _mk_repart(keys, pay, async_compact=False)
+        dbuf = _mk_repart(keys, pay, async_compact=True)
+        pairs = []
+        for i in range(4):
+            for _ in range(10):
+                kind = int(rng.choice(4, p=[0.4, 0.4, 0.1, 0.1]))
+                k = int(uni[int(rng.integers(0, len(uni)))])
+                p = int(rng.integers(1, 2**31))
+                pairs.append((_submit(sync, kind, k, p),
+                              _submit(dbuf, kind, k, p)))
+            sync.step()
+            dbuf.step()
+            manual_pool.pump()
+            dbuf.drain_compactions()
+            sizes_s = [sh.idx.n_items for sh in sync.shards]
+            sizes_d = [sh.idx.n_items for sh in dbuf.shards]
+            sync.request_split(max(range(len(sizes_s)),
+                                   key=sizes_s.__getitem__))
+            dbuf.request_split(max(range(len(sizes_d)),
+                                   key=sizes_d.__getitem__))
+        manual_pool.pump()
+        dbuf.drain_compactions()
+        sweep = [(sync.get(int(k)), dbuf.get(int(k))) for k in uni[:64]]
+        sync.step()
+        dbuf.step()
+        for m, s in pairs + sweep:
+            assert m.result == s.result, (m.op, m.key)
+        assert sync.splits == dbuf.splits >= 1
+        assert sync.part.version == dbuf.part.version
+        np.testing.assert_array_equal(sync.part.bounds, dbuf.part.bounds)
+
+
+class TestRepartitionFaults:
+    def _engines(self):
+        keys = make_dataset("covid", 900, seed=1)
+        pay = payloads_for(keys)
+        return keys, _mk_repart(keys, pay), _mk_frozen(keys, pay)
+
+    def test_failed_split_build_leaves_old_version_live(self, manual_pool):
+        """A split build that raises: boundary version/bounds/shard count
+        unchanged, the build's pin released, the frozen window's writes
+        replayed (pending log intact through the abort) — and a retried
+        split succeeds afterwards."""
+        keys, rep, frz = self._engines()
+        v0, s0 = rep.part.version, rep.num_shards
+        bounds0 = rep.part.bounds.copy()
+
+        def boom(s, split_key, sdi, epoch):
+            raise RuntimeError("injected split-build failure")
+        rep._split_job = boom
+        assert rep.request_split(0)
+        # in-window writes confined to the frozen shard's range -> pending
+        win = [("insert", int(keys[2]) + 1, 91), ("delete", int(keys[3])),
+               ("get", int(keys[3]))]
+        out_r = [rep.submit(*a) for a in win]
+        out_f = [frz.submit(*a) for a in win]
+        rep.step()
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        assert rep.shards[0].pending, "window writes must defer"
+        manual_pool.pump()                 # delivers the failure
+        del rep._split_job
+        post = [("get", int(keys[2]) + 1), ("get", int(keys[3])),
+                ("scan", int(keys[0]), 0, 16)]
+        out_r = [rep.submit(*a) for a in post]
+        out_f = [frz.submit(*a) for a in post]
+        rep.step()                         # install -> abort path
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        st = rep.stats()
+        assert st["repart_failures"] == 1 and st["splits"] == 0
+        assert rep.part.version == v0 and rep.num_shards == s0
+        np.testing.assert_array_equal(rep.part.bounds, bounds0)
+        assert rep.part.pinned_versions() == {}
+        assert not rep.shards[0].pending   # replayed, not lost
+        assert rep.shards[0].frozen_overlay is None
+        # retry with the real build: must land
+        assert rep.request_split(0)
+        manual_pool.pump()
+        out_r = [rep.submit("get", int(k)) for k in keys[:8]]
+        out_f = [frz.submit("get", int(k)) for k in keys[:8]]
+        rep.step()
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        assert rep.splits == 1 and rep.part.version == v0 + 1
+        _check_drained(rep)
+
+    def test_failed_merge_build_aborts_both_shards(self, manual_pool):
+        keys, rep, frz = self._engines()
+        v0, s0 = rep.part.version, rep.num_shards
+
+        def boom(s, sdi, epoch):
+            raise RuntimeError("injected merge-build failure")
+        rep._merge_job = boom
+        assert rep.request_merge(0)
+        win = [("insert", int(keys[2]) + 1, 13),
+               ("insert", int(rep.part.bounds[0]) + 1, 14)]   # both shards
+        out_r = [rep.submit(*a) for a in win]
+        out_f = [frz.submit(*a) for a in win]
+        rep.step()
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        manual_pool.pump()
+        del rep._merge_job
+        post = [("get", int(keys[2]) + 1),
+                ("get", int(rep.part.bounds[0]) + 1)]
+        out_r = [rep.submit(*a) for a in post]
+        out_f = [frz.submit(*a) for a in post]
+        rep.step()
+        frz.step()
+        assert [r.result for r in out_r] == [r.result for r in out_f]
+        st = rep.stats()
+        assert st["repart_failures"] == 1 and st["merges"] == 0
+        assert rep.part.version == v0 and rep.num_shards == s0
+        assert all(sh.frozen_overlay is None and not sh.pending
+                   for sh in rep.shards[:2])
+        assert rep.part.pinned_versions() == {}
+
+    def test_pinned_version_survives_split_then_gcs(self, manual_pool):
+        """Version-pinning scenario: work that began on version v (an
+        external pin standing in for a long step) keeps routing on v's
+        boundary table while a split lands concurrently; the retired table
+        is GC'd only when the last pin drops."""
+        keys, rep, _ = self._engines()
+        v0 = rep.part.pin()                # long-lived reader on version v0
+        bounds0 = rep.part.bounds.copy()
+        probes = [int(k) for k in keys[:: len(keys) // 16]]
+        routed0 = [rep.part.shard_of(k, v0) for k in probes]
+        assert rep.request_split(
+            max(range(rep.num_shards),
+                key=lambda i: rep.shards[i].idx.n_items))
+        manual_pool.pump()
+        r = rep.submit("get", probes[0])
+        rep.step()                         # installs: version bumps
+        assert r.result is not None
+        assert rep.part.version == v0 + 1
+        # v0 is retired but pinned: identical routing on the old table
+        assert v0 in rep.part.history
+        np.testing.assert_array_equal(rep.part.bounds_at(v0), bounds0)
+        assert [rep.part.shard_of(k, v0) for k in probes] == routed0
+        # new version routes more shards
+        assert len(rep.part.bounds) == len(bounds0) + 1
+        rep.part.unpin(v0)                 # last pin drops -> GC
+        assert set(rep.part.history) == {v0 + 1}
+        _check_drained(rep)
+
+    def test_repartition_excludes_compaction(self, manual_pool):
+        """Mutual exclusion: no compaction may start while a repartition is
+        in flight (shard ids shift at install), and no repartition may start
+        while compaction builds are in flight."""
+        keys, rep, _ = self._engines()
+        assert rep.request_split(0)
+        # a storm that would freeze every shard is deferred: overlays grow,
+        # nothing freezes while the split is in flight
+        rng = np.random.default_rng(4)
+        need = int(0.05 * len(keys)) + 4
+        for k in rng.integers(int(keys[0]), int(keys[-1]), need,
+                              dtype=np.uint64):
+            rep.insert(int(k), 1)
+        rep.step()
+        assert rep.stats()["inflight"] == 0
+        assert not rep.request_merge(0), "repartition already in flight"
+        manual_pool.pump()
+        rep.insert(int(keys[0]), 2)
+        rep.step()                         # installs split, then compacts
+        assert rep.splits == 1
+        # after the install the deferred compactions may start
+        rep.insert(int(keys[0]), 3)
+        rep.step()
+        assert not rep.request_split(0) or rep.stats()["inflight"] == 0
+        manual_pool.pump()
+        rep.drain_compactions()
+        _check_drained(rep)

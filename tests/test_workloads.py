@@ -5,7 +5,7 @@ import pytest
 from repro.core import Aulid
 from repro.core.baselines import BPlusTree
 from repro.core.workloads import (WORKLOADS, make_dataset, payloads_for,
-                                  run_workload)
+                                  run_workload, shifting_hotspot_keys)
 
 
 @pytest.mark.parametrize("workload", WORKLOADS)
@@ -32,3 +32,47 @@ def test_blocks_metric_comparable(datasets):
     rb = run_workload(BPlusTree(), "w1_lookup", keys, "covid", n_queries=500)
     assert 1.0 <= ra.reads_per_op <= 6.0
     assert 1.0 <= rb.reads_per_op <= 6.0
+
+
+class TestShiftingHotspot:
+    """The drift generator feeding the repartition gate (DESIGN.md §12)."""
+
+    LO, HI = 1_000_000, 9_000_000
+
+    def test_seeded_determinism(self):
+        a = shifting_hotspot_keys(2_000, self.LO, self.HI, seed=7)
+        b = shifting_hotspot_keys(2_000, self.LO, self.HI, seed=7)
+        np.testing.assert_array_equal(a, b)
+        c = shifting_hotspot_keys(2_000, self.LO, self.HI, seed=8)
+        assert not np.array_equal(a, c)
+        # an explicit rng takes precedence over the seed
+        d = shifting_hotspot_keys(2_000, self.LO, self.HI,
+                                  rng=np.random.default_rng(7))
+        np.testing.assert_array_equal(a, d)
+
+    def test_center_advances_over_keyspace(self):
+        """The hotspot sweeps lo -> hi: early draws cluster near lo, late
+        draws near hi, and every quarter of the stream lands in its own
+        quarter-ish of the keyspace (that per-range churn is what forces
+        repartitioning under drift)."""
+        ks = shifting_hotspot_keys(8_000, self.LO, self.HI,
+                                   window_frac=0.02, seed=3)
+        assert ks.dtype == np.uint64
+        assert ks.min() >= self.LO and ks.max() <= self.HI
+        span = self.HI - self.LO
+        quarters = np.array_split(ks.astype(np.int64), 4)
+        for i, q in enumerate(quarters):
+            center = self.LO + (i + 0.5) / 4 * span
+            assert abs(float(np.median(q)) - center) < span / 8, i
+
+    def test_zipf_window_bounds_dispersion(self):
+        """Draws stay inside the zipf window around the advancing center."""
+        frac = 0.05
+        ks = shifting_hotspot_keys(4_000, self.LO, self.HI,
+                                   window_frac=frac, sweeps=1.0, seed=5)
+        span = self.HI - self.LO
+        centers = (self.LO
+                   + (np.modf(np.arange(4_000) / 4_000)[0] * span)
+                   .astype(np.int64))
+        dist = np.abs(ks.astype(np.int64) - centers)
+        assert dist.max() <= int(span * frac) + 1
