@@ -17,7 +17,8 @@ import traceback
 
 MODULES = ["workloads", "bulkload", "tail_latency", "scalability",
            "design_read_opts", "design_structures", "adjust_study",
-           "device_lookup", "mixed_serving", "sharded_serving", "roofline"]
+           "device_lookup", "mixed_serving", "sharded_serving",
+           "multi_device_serving", "roofline"]
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -34,7 +35,23 @@ SERVING_SECTIONS = {
     "drift": "sharded_serving",
     "device_lookup": "device_lookup",
     "mixed_serving": "mixed_serving",
+    "multi_device": "multi_device_serving",
 }
+
+
+def _check_section(name: str, sec: dict) -> dict:
+    """A freshly built section must carry measured results, not just its
+    stamp + run parameters: a meta-only section (the bug this guards
+    against: `mixed_serving` once emitted {emitter, generated, meta} and
+    presented a parameter echo as benchmark output) is a collation bug in
+    THIS file and fails loudly rather than shipping."""
+    payload = {k: v for k, v in sec.items()
+               if k not in ("emitter", "generated", "meta") and v}
+    if not payload:
+        raise ValueError(
+            f"emit_bench_serving: section {name!r} has no result payload "
+            f"beyond emitter/generated/meta — the emitter dropped its rows")
+    return sec
 
 
 def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
@@ -43,8 +60,10 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
     latency, compaction counts (monolithic vs sharded), the compaction-storm
     flatness numbers (sync vs double-buffered, DESIGN.md §11), the drift
     scenario (frozen vs online-repartitioning boundary table, DESIGN.md
-    §12), and the device read path (jnp vs fused Pallas kernel, per-geometry tuning
-    choice), so the serving perf trajectory accumulates across PRs.
+    §12), the device read path (jnp vs fused Pallas kernel, per-geometry
+    tuning choice), the mixed read/write amortized-insert numbers, and the
+    multi-device mesh serving scaling (DESIGN.md §13), so the serving perf
+    trajectory accumulates across PRs.
 
     Sections merge, never fork: only the sections whose source module ran
     fresh in THIS invocation (``fresh``) are rebuilt — the others carry over
@@ -137,9 +156,40 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
         changed = True
     data = load("mixed_serving")
     if data is not None:
+        rows = data.get("rows", [])
+        by_ds: dict[str, dict] = {}
+        for row in rows:
+            ent = by_ds.setdefault(row["dataset"], {})
+            ent[row["mode"]] = {
+                "amortized_us_per_insert": row.get("amortized_us_per_insert"),
+                "maintain_s": row.get("maintain_s"),
+                "read_s": row.get("read_s"),
+                "inserts": row.get("inserts"),
+                "compactions": row.get("compactions"),
+            }
+            if row["mode"] == "overlay":
+                ent["overlay_speedup_vs_rebuild"] = \
+                    row.get("speedup_vs_rebuild")
         sections["mixed_serving"] = {"emitter": "mixed_serving",
                                      "generated": stamp,
-                                     "meta": data.get("meta", {})}
+                                     "meta": data.get("meta", {}),
+                                     "datasets": by_ds}
+        changed = True
+    data = load("multi_device_serving")
+    if data is not None:
+        sections["multi_device"] = {
+            "emitter": "multi_device_serving", "generated": stamp,
+            "meta": data.get("meta", {}),
+            "engines": {row["engine"]: {
+                "devices": row.get("devices"),
+                "shard_slots": row.get("shard_slots"),
+                "per_shard_qcap": row.get("per_shard_qcap"),
+                "lanes_per_device": row.get("lanes_per_device"),
+                "read_throughput_ops_s": row.get("read_throughput_ops_s"),
+                "speedup_vs_single_device":
+                    row.get("speedup_vs_single_device"),
+            } for row in data.get("rows", [])},
+        }
         changed = True
     data = load("device_lookup")
     if data is not None:
@@ -158,6 +208,9 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
         changed = True
     if not changed or not sections:
         return None
+    for name, sec in sections.items():
+        if sec.get("generated") == stamp:    # rebuilt this invocation
+            _check_section(name, sec)
     doc = {"benchmark": "serving", "generated": stamp, "sections": sections}
     out.write_text(json.dumps(doc, indent=1))
     return out

@@ -23,6 +23,8 @@ import numpy as np
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
+from jax.experimental.shard_map import shard_map  # noqa: E402
+from jax.sharding import PartitionSpec  # noqa: E402
 
 from .delta_overlay import (DeltaOverlay, UINT64_MAX, merge_overlays,  # noqa: E402
                             next_pow2)
@@ -171,7 +173,14 @@ def _scan_leaf_walk(leaf_keys, leaf_pay, leaf_count, leaf_next,
         out_p = out_p.at[:, b * cap : (b + 1) * cap].set(ps)
         out_v = out_v.at[:, b * cap : (b + 1) * cap].set(valid)
         leaf = jnp.where(leaf >= 0, jnp.take(leaf_next, leaf, mode="clip"), -1)
-    # compact: order valid entries first (keys within+across blocks are sorted)
+    return _scan_compact(out_k, out_p, out_v, count)
+
+
+def _scan_compact(out_k, out_p, out_v, count: int):
+    """Compact a gathered (Q, blocks*cap) scan window: order valid entries
+    first (keys within+across blocks are sorted, so the stable sort keeps
+    key order) and slice to ``count`` (shared with the mesh scan, whose walk
+    gathers the same window via per-device contributions + psum)."""
     order = jnp.argsort(~out_v, axis=1, stable=True)[:, :count]
     keys = jnp.take_along_axis(out_k, order, axis=1)
     pays = jnp.take_along_axis(out_p, order, axis=1)
@@ -287,6 +296,12 @@ def _overlay_probe(ovr: dict, q: jnp.ndarray):
     tomb = hit & jnp.take(tombs, posc)
     pay = jnp.take(pays, posc)
     return hit, tomb, pay
+
+
+# jitted form for hosts that merge the overlay outside a jitted read path
+# (the engine's host-routed mesh lookup): same function, compiled once per
+# pack/batch shape instead of ~6 eager dispatches per read batch
+overlay_probe_jit = jax.jit(_overlay_probe)
 
 
 @functools.partial(jax.jit, static_argnames=("height",))
@@ -592,3 +607,345 @@ def scan_batch_sharded_overlay(stk: dict, ovr: dict, q: jnp.ndarray,
     ks, ps, vs = scan_batch_sharded(stk, q, count=base, height=height,
                                     max_blocks=max_blocks, qcap=qcap)
     return _overlay_scan_merge(ks, ps, vs, keys, pays, tombs, q, count)
+
+
+# ------------------------------------------------------------------------ mesh
+# Multi-device mesh read path (DESIGN.md §13): the stacked pools shard their
+# leading (S, ...) axis across the 1-D index mesh of
+# ``repro.parallel.index_mesh`` (placement in ``parallel/index_placement.py``)
+# and the entry points below run the SAME traversal as the vmapped sharded
+# path, but per device under ``shard_map``: every device routes the
+# (replicated) query batch over the (replicated) boundary table, keeps only
+# the queries whose shard it owns, lane-packs them into a TIGHT
+# (S_local, qcap) matrix, vmaps the monolithic traversal over its local
+# pools, and contributes its owned results to an all-gather (psum of
+# disjoint contributions) of only the (B,)-shaped outputs — pools never move.
+#
+# Two consequences the benchmarks measure: (1) on a real multi-device
+# backend each device touches only its own shards' memory; (2) even
+# single-core (forced host devices) the per-device lane matrix is
+# S_local*qcap instead of the monolithic S*Q, so total traversal work drops
+# by ~S/max_shard_load when the engine passes a tight qcap — the CPU-visible
+# half of the speedup ``benchmarks/multi_device_serving.py`` gates on.
+#
+# Sentinel (u64-max padded) queries are owned by NO device and return zeroed
+# results (found=False) — callers slice to the real count, exactly as with
+# the vmapped path.
+
+MESH_AXIS = "shards"
+
+
+def mesh_local_shards(S: int, mesh) -> int:
+    """Shards per device; the stack's padded slot count must divide the mesh
+    (the engine pads ``_shard_slots`` to a device multiple — refuse loudly
+    instead of serving from a silently replicated layout)."""
+    D = int(mesh.shape[MESH_AXIS])
+    if S % D:
+        raise ValueError(
+            f"stacked shard slots S={S} not divisible by the index mesh's "
+            f"{D} devices — pad shard slots to a device multiple")
+    return S // D
+
+
+def _mesh_pool_specs(stk: dict) -> dict:
+    """shard_map in_specs of the per-device pool operands: leading shard
+    axis on the mesh, trailing axes replicated."""
+    return {f: PartitionSpec(MESH_AXIS, *(None,) * (stk[f].ndim - 1))
+            for f in _DEVICE_FIELDS + ["meta", "last_leaf_min"]}
+
+
+def _mesh_lane_pack(q, local_sid, owned, S_local: int, qcap: int):
+    """Per-device lane packing: scatter this device's owned queries into an
+    (S_local, qcap) matrix (u64-max padded), with one trailing trash slot
+    absorbing non-owned queries and overflow.  Returns (q_mat, flat, order)
+    for the inverse gather."""
+    Q = q.shape[0]
+    lsid = jnp.where(owned, local_sid, S_local).astype(jnp.int32)
+    order = jnp.argsort(lsid, stable=True)
+    lsid_s = jnp.take(lsid, order)
+    q_s = jnp.take(q, order)
+    counts = jnp.bincount(lsid_s, length=S_local + 1)
+    offs = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                            jnp.cumsum(counts)[:-1]])
+    lane = jnp.arange(Q) - jnp.take(offs, lsid_s)
+    ok = (lsid_s < S_local) & (lane < qcap)
+    trash = S_local * qcap
+    flat = jnp.where(ok, lsid_s * qcap + lane, trash)
+    pad = jnp.uint64(UINT64_MAX)
+    q_mat = jnp.full((trash + 1,), pad, dtype=jnp.uint64) \
+        .at[flat].set(jnp.where(ok, q_s, pad))[:trash] \
+        .reshape(S_local, qcap)
+    return q_mat, flat, order
+
+
+def _mesh_gather_back(m, flat, order, Q: int):
+    """Inverse of :func:`_mesh_lane_pack` for one per-lane result matrix."""
+    v = jnp.concatenate([m.reshape(-1), jnp.zeros((1,), m.dtype)])[flat]
+    return jnp.zeros((Q,), v.dtype).at[order].set(v)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "height", "qcap"))
+def lookup_batch_sharded_mesh(mesh, stk: dict, q: jnp.ndarray,
+                              height: int = 3, qcap: int | None = None):
+    """Mesh twin of :func:`lookup_batch_sharded`: per-device local traversal
+    + result all-gather (module comment above).  Same returns
+    (payload u64, found bool, global leaf row i32, shard id i32), except
+    sentinel queries return zeros for leaf/sid (they have no owner).
+
+    ``qcap`` (static) bounds the per-shard lane count exactly as in the
+    vmapped path — but here a tight value is the point: each device's
+    traversal costs S_local*qcap lanes, so the engine's host-side routing
+    bound turns shard locality into proportionally less work per device."""
+    q = q.astype(jnp.uint64)
+    Q = q.shape[0]
+    S = int(stk["meta"].shape[0])
+    L = int(stk["leaf_keys"].shape[1])
+    S_local = mesh_local_shards(S, mesh)
+    qcap = Q if qcap is None else min(int(qcap), Q)
+    pools = {f: stk[f] for f in _DEVICE_FIELDS + ["meta", "last_leaf_min"]}
+
+    def body(pools, bounds, qq):
+        d = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32)
+        sid = jnp.searchsorted(bounds, qq, side="left").astype(jnp.int32)
+        local = sid - d * S_local
+        owned = (local >= 0) & (local < S_local) \
+            & (qq != jnp.uint64(UINT64_MAX))
+        q_mat, flat, order = _mesh_lane_pack(qq, local, owned, S_local, qcap)
+        pay_m, found_m, leaf_m = jax.vmap(
+            lambda a, qv: lookup_batch(a, qv, height=height))(pools, q_mat)
+        pay = _mesh_gather_back(pay_m, flat, order, Q)
+        found = _mesh_gather_back(found_m.astype(jnp.int32), flat, order, Q)
+        leaf = _mesh_gather_back(leaf_m, flat, order, Q)
+        gleaf = sid * L + leaf
+        zero = jnp.int32(0)
+        outs = (jnp.where(owned, pay, jnp.uint64(0)),
+                jnp.where(owned, found, zero),
+                jnp.where(owned, gleaf, zero),
+                jnp.where(owned, sid, zero))
+        return tuple(jax.lax.psum(o, MESH_AXIS) for o in outs)
+
+    pay, found, gleaf, sid = shard_map(
+        body, mesh=mesh,
+        in_specs=(_mesh_pool_specs(stk), PartitionSpec(), PartitionSpec()),
+        out_specs=(PartitionSpec(),) * 4,
+        check_rep=False,   # scan/while bodies lack replication rules
+    )(pools, stk["bounds"], q)
+    return pay, found.astype(bool), gleaf, sid
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "height"))
+def lookup_batch_sharded_mesh_packed(mesh, stk: dict, q_mat: jnp.ndarray,
+                                     height: int = 3):
+    """Host-routed mesh lookup: the caller has already scattered queries by
+    owning shard into an (S, qcap) lane matrix (u64-max padded), so each
+    device receives ONLY its (S_local, qcap) slice as a sharded input and
+    runs pure traversal — no per-device replicated routing/packing work,
+    which on time-sliced host devices (and on real chips, as wasted flops)
+    costs more than the traversal itself for large batches.  Returns the
+    per-lane (S, qcap) result mats (payload u64, found i32, global leaf
+    row i32), sharded the same way; the caller inverts its own permutation.
+    """
+    S = int(stk["meta"].shape[0])
+    L = int(stk["leaf_keys"].shape[1])
+    S_local = mesh_local_shards(S, mesh)
+    pools = {f: stk[f] for f in _DEVICE_FIELDS + ["meta", "last_leaf_min"]}
+
+    def body(pools, qm):
+        d = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32)
+        pay_m, found_m, leaf_m = jax.vmap(
+            lambda a, qv: lookup_batch(a, qv, height=height))(pools, qm)
+        row = d * S_local + jnp.arange(S_local, dtype=jnp.int32)
+        gleaf_m = row[:, None] * L + leaf_m
+        return pay_m, found_m.astype(jnp.int32), gleaf_m
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_mesh_pool_specs(stk), PartitionSpec(MESH_AXIS, None)),
+        out_specs=(PartitionSpec(MESH_AXIS, None),) * 3,
+        check_rep=False,   # scan/while bodies lack replication rules
+    )(pools, q_mat.astype(jnp.uint64))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "height", "qcap"))
+def lookup_batch_sharded_overlay_mesh(mesh, stk: dict, ovr: dict,
+                                      q: jnp.ndarray, height: int = 3,
+                                      qcap: int | None = None):
+    """Mesh twin of :func:`lookup_batch_sharded_overlay`: the overlay pack is
+    replicated, so the (cheap, (Q,)-shaped) merge happens outside the
+    shard_map on the all-gathered results."""
+    q = q.astype(jnp.uint64)
+    pay, found, gleaf, _ = lookup_batch_sharded_mesh(mesh, stk, q,
+                                                     height=height, qcap=qcap)
+    hit, tomb, opay = _overlay_probe(ovr, q)
+    pay = jnp.where(hit & ~tomb, opay, pay)
+    found = jnp.where(hit, ~tomb, found)
+    return jnp.where(found, pay, 0), found, gleaf
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "height", "count", "max_blocks",
+                                    "qcap"))
+def scan_batch_sharded_mesh(mesh, stk: dict, q: jnp.ndarray, count: int = 100,
+                            height: int = 3, max_blocks: int | None = None,
+                            qcap: int | None = None):
+    """Mesh twin of :func:`scan_batch_sharded`: start leaves come from the
+    mesh lookup (replicated after its all-gather); the chain walk runs under
+    shard_map with the successor chain replicated — each device follows the
+    walk but contributes key/payload/valid entries only for leaves in its
+    local row range, and the disjoint (Q, blocks*cap) windows psum before
+    the shared compaction."""
+    q = q.astype(jnp.uint64)
+    S = int(stk["meta"].shape[0])
+    L = int(stk["leaf_keys"].shape[1])
+    cap = int(stk["leaf_keys"].shape[2])
+    S_local = mesh_local_shards(S, mesh)
+    if max_blocks is None:
+        # + S: each shard boundary crossed can add one underfull chain leaf
+        max_blocks = count // max(cap // 2, 1) + 2 + S
+    _, _, gleaf, _ = lookup_batch_sharded_mesh(mesh, stk, q, height=height,
+                                               qcap=qcap)
+
+    def body(lk, lp, lc, chain, leaf0, qq):
+        d = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32)
+        base = d * (S_local * L)
+        lk = lk.reshape(-1, cap)
+        lp = lp.reshape(-1, cap)
+        lc = lc.reshape(-1)
+        Q = qq.shape[0]
+        out_k = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
+        out_p = jnp.zeros((Q, max_blocks * cap), dtype=jnp.uint64)
+        out_v = jnp.zeros((Q, max_blocks * cap), dtype=jnp.int32)
+        leaf = leaf0
+        for b in range(max_blocks):
+            mine = (leaf >= base) & (leaf < base + S_local * L)
+            lrow = leaf - base
+            ks = jnp.take(lk, lrow, axis=0, mode="clip")
+            ps = jnp.take(lp, lrow, axis=0, mode="clip")
+            cnt = jnp.take(lc, lrow, mode="clip")
+            valid = mine[:, None] & (jnp.arange(cap)[None, :] < cnt[:, None]) \
+                & (ks >= qq[:, None])
+            out_k = out_k.at[:, b * cap:(b + 1) * cap].set(
+                jnp.where(valid, ks, jnp.uint64(0)))
+            out_p = out_p.at[:, b * cap:(b + 1) * cap].set(
+                jnp.where(valid, ps, jnp.uint64(0)))
+            out_v = out_v.at[:, b * cap:(b + 1) * cap].set(
+                valid.astype(jnp.int32))
+            leaf = jnp.where(leaf >= 0,
+                             jnp.take(chain, leaf, mode="clip"), -1)
+        return (jax.lax.psum(out_k, MESH_AXIS),
+                jax.lax.psum(out_p, MESH_AXIS),
+                jax.lax.psum(out_v, MESH_AXIS))
+
+    leaf_specs = tuple(
+        PartitionSpec(MESH_AXIS, *(None,) * (stk[f].ndim - 1))
+        for f in ("leaf_keys", "leaf_pay", "leaf_count"))
+    out_k, out_p, out_v = shard_map(
+        body, mesh=mesh,
+        in_specs=leaf_specs + (PartitionSpec(), PartitionSpec(),
+                               PartitionSpec()),
+        out_specs=(PartitionSpec(),) * 3,
+        check_rep=False,   # scan/while bodies lack replication rules
+    )(stk["leaf_keys"], stk["leaf_pay"], stk["leaf_count"],
+      stk["leaf_next_chain"], gleaf, q)
+    return _scan_compact(out_k, out_p, out_v.astype(bool), count)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "height", "count", "max_blocks",
+                                    "qcap", "ov_bound"))
+def scan_batch_sharded_overlay_mesh(mesh, stk: dict, ovr: dict,
+                                    q: jnp.ndarray, count: int = 100,
+                                    height: int = 3,
+                                    max_blocks: int | None = None,
+                                    qcap: int | None = None,
+                                    ov_bound: int | None = None):
+    """Mesh twin of :func:`scan_batch_sharded_overlay` (same overlay-window
+    widening and two-way sorted merge, over the mesh scan)."""
+    q = q.astype(jnp.uint64)
+    keys, pays, tombs = _overlay_unpack(ovr)
+    cap = keys.shape[0]
+    hide = cap if ov_bound is None else min(int(ov_bound), cap)
+    base = count + hide
+    if max_blocks is not None:
+        leaf_cap = stk["leaf_keys"].shape[2]
+        max_blocks = max_blocks + hide // max(leaf_cap // 2, 1) + 1
+    ks, ps, vs = scan_batch_sharded_mesh(mesh, stk, q, count=base,
+                                         height=height, max_blocks=max_blocks,
+                                         qcap=qcap)
+    return _overlay_scan_merge(ks, ps, vs, keys, pays, tombs, q, count)
+
+
+@functools.lru_cache(maxsize=8)
+def _mesh_install_fn(mesh, ndims: tuple):
+    """Jitted donated single-device shard install for one mesh (DESIGN.md
+    §13): under shard_map only the device owning the target shard rewrites
+    its pool slices; every other device's slices pass through untouched —
+    the stacked-pool upload of an async compaction or repartition swap
+    touches exactly one device.  ``ndims`` = per-field stacked ranks (the
+    spec layout), so one compile serves every shard/stack of that layout."""
+    specs = {f: PartitionSpec(MESH_AXIS, *(None,) * (nd - 1))
+             for f, nd in zip(_DEVICE_FIELDS, ndims)}
+
+    def body(pools, s, rows):
+        d = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32)
+        S_local = next(iter(pools.values())).shape[0]
+        local = s - d * S_local
+        own = (local >= 0) & (local < S_local)
+        lc = jnp.clip(local, 0, S_local - 1).astype(jnp.int32)
+        out = {}
+        for f, a in pools.items():
+            row = jnp.where(own, rows[f], a[lc])
+            idx = (lc,) + (jnp.int32(0),) * (a.ndim - 1)
+            out[f] = jax.lax.dynamic_update_slice(a, row[None], idx)
+        return out
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(specs, PartitionSpec(), {f: PartitionSpec()
+                                           for f in _DEVICE_FIELDS}),
+        out_specs=specs,
+        check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def update_stacked_shard_mesh(mesh, stk: dict, sdi, shards: list[int],
+                              dev_slices: dict | None = None) -> dict:
+    """Mesh twin of :func:`update_stacked_shard`: same per-shard donated
+    in-place installs (O(slice), one compile per mesh+layout), executed as
+    single-device writes on the device owning each shard; the small
+    replicated/per-shard metadata re-places through the index placement
+    rules."""
+    from ..parallel.index_placement import place_stacked
+    assert shards, "update_stacked_shard_mesh needs at least one shard"
+    stk = dict(stk)
+    pools = {f: stk[f] for f in _DEVICE_FIELDS}
+    install = _mesh_install_fn(
+        mesh, tuple(stk[f].ndim for f in _DEVICE_FIELDS))
+    for s in shards:
+        dev = dev_slices.get(s) if dev_slices is not None else None
+        rows = {f: dev[f] if dev is not None and f in dev
+                else jnp.asarray(getattr(sdi, f)[s]) for f in _DEVICE_FIELDS}
+        pools = install(pools, jnp.int32(s), rows)
+    stk.update(pools)
+    stk.update(place_stacked(
+        {"meta": jnp.asarray(sdi.meta),
+         "last_leaf_min": jnp.asarray(sdi.last_leaf_min),
+         "leaf_next_chain": jnp.asarray(sdi.leaf_next_chain)}, mesh))
+    stk["snap_token"] = new_snap_token()
+    return stk
+
+
+def mesh_lookup_backend_fns(backend: str, mesh):
+    """Mesh twin of :func:`lookup_backend_fns`: the overlay-merged
+    point-lookup entry bound to an index mesh, callable as
+    ``fn(snap, ovr, q, height=..., qcap=...)``.  "fused" keeps the Pallas
+    kernel per-device-local under shard_map (interpret off-TPU); "jnp" is
+    the bit-exact oracle, as everywhere else."""
+    b = resolve_read_backend(backend)
+    if b == "jnp":
+        return functools.partial(lookup_batch_sharded_overlay_mesh, mesh)
+    from ..kernels.fused_lookup.ops import (
+        fused_lookup_batch_sharded_overlay_mesh)
+    interpret = (b == "fused_interpret" or jax.default_backend() != "tpu")
+    return functools.partial(fused_lookup_batch_sharded_overlay_mesh, mesh,
+                             interpret=interpret)

@@ -27,6 +27,8 @@ explicitly (or via :func:`autotune_strategy`) to override.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import time
 from collections import OrderedDict
 
@@ -36,6 +38,8 @@ import numpy as np
 from ...core.lookup import _DEVICE_FIELDS, STALE_STEPS
 
 import jax.numpy as jnp  # noqa: E402  (x64 enabled by the lookup import)
+from jax.experimental.shard_map import shard_map  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
 
 from . import tuning  # noqa: E402
 from .fused_lookup import KernelConfig, fused_lookup_planes  # noqa: E402
@@ -159,6 +163,7 @@ _CACHE_LIMIT = 16
 def clear_operand_cache() -> None:
     _OPERANDS.clear()
     _OV_OPERANDS.clear()
+    _MESH_OPERANDS.clear()   # defined in the mesh section below
 
 
 def _cached(cache: OrderedDict, src: dict, fingerprint: tuple, build,
@@ -281,6 +286,203 @@ def fused_lookup_batch_sharded_overlay(stk: dict, ovr: dict, q,
     del qcap
     pay, found, leaf, sid, g = _run(stk, ovr, q, height, interpret, strategy)
     return pay, found, sid * g.leaf_pool + leaf
+
+
+# ----------------------------------------------------------------------- mesh
+# Mesh-placed fused read path (DESIGN.md §13): the plane-packed pools shard
+# along their row axis — every pool's row count is S * <per-shard pool>, and
+# the engine pads S to a device multiple, so the leading-axis split lands
+# exactly on shard boundaries.  Each device runs the SAME kernel body over
+# its local S/D-shard slice with a shifted boundary-table window, masks the
+# queries it does not own to the u64-max sentinel, and the (B,)-sized result
+# planes ``psum`` together — disjoint ownership means each slot is written by
+# exactly one device.  Overlay merge happens outside ``shard_map`` on the
+# replicated packed overlay, identical to the jnp mesh path in
+# ``core.lookup``.
+
+_POOL_SPECS = (
+    PartitionSpec(None, "shards"),          # slots_i32   (4, S*slot)
+    PartitionSpec(None, "shards"),          # slot_key    (2, S*slot)
+    PartitionSpec(None, "shards"),          # node_i32    (3, S*node)
+    PartitionSpec(None, "shards"),          # node_f64    (2, S*node)
+    PartitionSpec(None, "shards", None),    # pa_keys     (2, S*pa, cap)
+    PartitionSpec("shards", None),          # pa_ptrs     (S*pa, cap)
+    PartitionSpec(None, "shards", None),    # bt_keys     (2, S*bt, cap)
+    PartitionSpec("shards", None),          # bt_ptrs     (S*bt, cap)
+    PartitionSpec("shards", None, None),    # leaf_pack   (S*leaf, 4, C)
+    PartitionSpec(None, "shards"),          # meta        (2, S)
+    PartitionSpec(None, "shards"),          # llm         (2, S)
+)
+
+
+class MeshFusedOperands:
+    """Mesh placement of one :class:`FusedOperands` pack.
+
+    Pools go on the devices row-sharded (``_POOL_SPECS``); the boundary
+    planes are rebuilt replicated and padded to ``(D-1)*S_local +
+    bounds_len`` u64-max entries so every device can ``dynamic_slice`` its
+    own ``bounds_len``-wide window at offset ``d * S_local`` — the in-kernel
+    route count over that window IS the local shard id for owned queries
+    (bounds are sorted; entries left of the window are all < q)."""
+
+    def __init__(self, ops: FusedOperands, mesh, bounds_u64: np.ndarray):
+        S = ops.geom.num_shards
+        D = int(mesh.shape["shards"])
+        if S % D:
+            raise ValueError(
+                f"mesh fused lookup: {S} shard slots not divisible by "
+                f"{D} mesh devices")
+        self.S, self.D = S, D
+        self.Sl = S // D
+        self.nbl = max(_MIN_BOUNDS, self.Sl)
+        plen = (D - 1) * self.Sl + self.nbl
+        pad = np.full(plen, UMAX, dtype=np.uint64)
+        raw = np.asarray(bounds_u64, dtype=np.uint64)
+        pad[: raw.shape[0]] = raw
+        self.bounds_planes = jax.device_put(
+            jnp.asarray(np.stack(_planes(pad))),
+            NamedSharding(mesh, PartitionSpec()))
+        self.bounds_u64 = jax.device_put(
+            jnp.asarray(raw), NamedSharding(mesh, PartitionSpec()))
+        pools = ops.pool_args()[:-1]        # all but the single-device bounds
+        self.pools = tuple(
+            jax.device_put(a, NamedSharding(mesh, spec))
+            for a, spec in zip(pools, _POOL_SPECS))
+        self.geom = ops.geom
+
+
+_MESH_OPERANDS: "OrderedDict[tuple, tuple]" = OrderedDict()
+_MESH_CACHE_LIMIT = 8
+
+
+def _mesh_operands(ops: FusedOperands, mesh, bounds_u64) -> MeshFusedOperands:
+    # keyed by pack identity + mesh; the pack is pinned so its id cannot be
+    # recycled while the entry lives (same discipline as ``_cached``)
+    key = (id(ops), mesh)
+    ent = _MESH_OPERANDS.get(key)
+    if ent is not None and ent[0] is ops:
+        _MESH_OPERANDS.move_to_end(key)
+        return ent[1]
+    mops = MeshFusedOperands(ops, mesh, bounds_u64)
+    _MESH_OPERANDS[key] = (ops, mops)
+    _MESH_OPERANDS.move_to_end(key)
+    while len(_MESH_OPERANDS) > _MESH_CACHE_LIMIT:
+        _MESH_OPERANDS.popitem(last=False)
+    return mops
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "cfg", "qcap", "interpret"))
+def _mesh_fused_call(mesh, cfg, qcap, interpret, pools, bpad, bounds, q):
+    Sl = cfg.num_shards
+    Q = q.shape[0]
+    T = max(-(-qcap // cfg.qb), 1)
+
+    def body(pools, bpad, bounds, qq):
+        (slots_i32, slot_key, node_i32, node_f64, pa_keys, pa_ptrs,
+         bt_keys, bt_ptrs, leaf_pack, meta, llm) = pools
+        d = jax.lax.axis_index("shards").astype(jnp.int32)
+        sid = jnp.searchsorted(bounds, qq, side="left").astype(jnp.int32)
+        local = sid - d * Sl
+        owned = (local >= 0) & (local < Sl) & (qq != jnp.uint64(UMAX))
+        n_owned = jnp.sum(owned.astype(jnp.int32))
+        # owned-first compaction into the qcap launch window; slots past
+        # n_owned (and any non-owned spill when qcap == Q) masked to the
+        # never-matching sentinel
+        order = jnp.argsort(~owned, stable=True)
+        qsel = jnp.take(qq, order)[:qcap]
+        qsel = jnp.where(jnp.arange(qcap) < n_owned, qsel, jnp.uint64(UMAX))
+        qpad = jnp.full((T * cfg.qb,), jnp.uint64(UMAX)).at[:qcap].set(qsel)
+        qh = (qpad >> jnp.uint64(32)).astype(jnp.uint32).reshape(T, cfg.qb)
+        ql = (qpad & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32) \
+            .reshape(T, cfg.qb)
+        lb = jax.lax.dynamic_slice(
+            bpad, (jnp.int32(0), d * Sl), (2, cfg.bounds_len))
+        ts = jnp.arange(T, dtype=jnp.int32)
+        # fresh placeholder overlay operands: the module-level
+        # _empty_overlay_args cache must not capture tracers
+        ovk = jnp.zeros((4, 1), jnp.uint32)
+        ovt = jnp.zeros((1, 1), jnp.int32)
+        ph, plo, fnd, leaf, lsid = fused_lookup_planes(
+            cfg, ts, qh, ql, slots_i32, slot_key, node_i32, node_f64,
+            pa_keys, pa_ptrs, bt_keys, bt_ptrs, leaf_pack, meta, llm, lb,
+            ovk, ovt, interpret=interpret)
+        pay = ((ph.reshape(-1)[:qcap].astype(jnp.uint64) << 32)
+               | plo.reshape(-1)[:qcap].astype(jnp.uint64))
+        fnd = fnd.reshape(-1)[:qcap]
+        lsid = lsid.reshape(-1)[:qcap]
+        leaf = leaf.reshape(-1)[:qcap]
+        gleaf = (d * Sl + jnp.clip(lsid, 0, Sl - 1)) * cfg.leaf_pool + leaf
+        sel = order[:qcap]
+        payq = jnp.zeros((Q,), jnp.uint64).at[sel].set(pay)
+        fndq = jnp.zeros((Q,), jnp.int32).at[sel].set(fnd)
+        glq = jnp.zeros((Q,), jnp.int32).at[sel].set(gleaf)
+        z = jnp.uint64(0)
+        outs = (jnp.where(owned, payq, z),
+                jnp.where(owned, fndq, jnp.int32(0)),
+                jnp.where(owned, glq, jnp.int32(0)),
+                jnp.where(owned, sid, jnp.int32(0)))
+        return tuple(jax.lax.psum(o, "shards") for o in outs)
+
+    # check_rep=False: pallas_call has no replication rule
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_POOL_SPECS, PartitionSpec(), PartitionSpec(),
+                  PartitionSpec()),
+        out_specs=(PartitionSpec(),) * 4,
+        check_rep=False)(pools, bpad, bounds, q)
+
+
+def _run_mesh(mesh, stk: dict, q, height: int, qcap, interpret, strategy):
+    interpret = _resolve_interpret(interpret)
+    ops = _operands(stk)
+    mops = _mesh_operands(ops, mesh, np.asarray(stk["bounds"]))
+    q64 = jnp.asarray(q).astype(jnp.uint64)
+    Q = int(q64.shape[0])
+    # qcap is the PER-SHARD routing bound (the jnp lane-pack contract); a
+    # device owns S_local shards, so its launch width is S_local * qcap
+    qcap = Q if qcap is None else max(1, min(int(qcap) * mops.Sl, Q))
+    lgeom = dataclasses.replace(ops.geom, num_shards=mops.Sl)
+    st = strategy or tuning.choose_strategy(lgeom, interpret=interpret)
+    g = ops.geom
+    cfg = KernelConfig(
+        num_shards=mops.Sl, slot_pool=g.slot_pool,
+        node_pool=g.node_pool, pa_pool=g.pa_pool, pa_cap=g.pa_cap,
+        bt_pool=g.bt_pool, bt_cap=g.bt_cap, leaf_pool=g.leaf_pool,
+        leaf_cap=g.leaf_cap, bounds_len=mops.nbl,
+        overlay_cap=1, qb=st.qb, height=int(height),
+        stale_steps=STALE_STEPS, leaf_resident=(st.leaf == "persistent"),
+        gather=st.gather, sharded=True, has_overlay=False)
+    pay, fnd, gleaf, sid = _mesh_fused_call(
+        mesh, cfg, qcap, interpret, mops.pools, mops.bounds_planes,
+        mops.bounds_u64, q64)
+    return pay, fnd.astype(bool), gleaf, sid
+
+
+def fused_lookup_batch_sharded_mesh(mesh, stk: dict, q, height: int = 3, *,
+                                    qcap=None, interpret=None,
+                                    strategy=None):
+    """Fused-kernel twin of ``lookup_batch_sharded_mesh`` (pay, found,
+    global leaf row, shard id); per-device local kernel launches under
+    ``shard_map``."""
+    return _run_mesh(mesh, stk, q, height, qcap, interpret, strategy)
+
+
+def fused_lookup_batch_sharded_overlay_mesh(mesh, stk: dict, ovr: dict, q,
+                                            height: int = 3, *, qcap=None,
+                                            interpret=None, strategy=None):
+    """Fused-kernel twin of ``lookup_batch_sharded_overlay_mesh``.  The
+    overlay is replicated, so the merge runs once outside ``shard_map`` on
+    the gathered snapshot results (bit-identical to the in-kernel merge:
+    kernel pay planes are already zeroed where not found)."""
+    from ...core.lookup import _overlay_probe
+    pay, found, gleaf, _ = _run_mesh(mesh, stk, q, height, qcap, interpret,
+                                     strategy)
+    q64 = jnp.asarray(q).astype(jnp.uint64)
+    hit, tomb, opay = _overlay_probe(ovr, q64)
+    pay = jnp.where(hit & ~tomb, opay, pay)
+    found = jnp.where(hit, ~tomb, found)
+    return jnp.where(found, pay, jnp.uint64(0)), found, gleaf
 
 
 # ------------------------------------------------------------------- autotune

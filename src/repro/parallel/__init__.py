@@ -1,6 +1,8 @@
 """Parallelism substrate: logical-axis sharding rules, mesh context, collectives."""
-from .sharding import (ACT_RULES, PARAM_RULES, ShardingContext, current_mesh,
-                       named_sharding, set_context, shard_acts, spec_for)
+from .sharding import (ACT_RULES, INDEX_RULES, PARAM_RULES, ShardingContext,
+                       current_mesh, index_mesh, named_sharding, set_context,
+                       shard_acts, spec_for)
 
-__all__ = ["ACT_RULES", "PARAM_RULES", "ShardingContext", "current_mesh",
-           "named_sharding", "set_context", "shard_acts", "spec_for"]
+__all__ = ["ACT_RULES", "INDEX_RULES", "PARAM_RULES", "ShardingContext",
+           "current_mesh", "index_mesh", "named_sharding", "set_context",
+           "shard_acts", "spec_for"]

@@ -1,0 +1,76 @@
+"""Mesh placement of the stacked shard pools (DESIGN.md §13).
+
+The ``(S, ...)`` pools a :class:`~repro.core.device_index.StackedDeviceIndex`
+stacks are layout-ready for a 1-D device mesh: the leading shard axis maps to
+the mesh axis ``'shards'`` (``INDEX_RULES`` in ``sharding.py``), so each
+device holds only its own shards' slices — AULID's shard-local I/O at the
+pod level.  Everything a query needs *before* it knows its owning device
+stays replicated:
+
+* ``bounds`` — the boundary table: routing (one searchsorted) happens on
+  every device so each can decide ownership locally, no scatter collective;
+* ``leaf_next_chain`` — the cross-shard successor chain: a scan that crosses
+  a shard boundary continues on the *next* device's pools, so every device
+  walks the (tiny, (S*L,) i32) chain and contributes only its local rows;
+* the packed overlay (``ov_pack``) and the query batch.
+
+Placement is resolved through the same ``spec_for`` rule machinery the LM
+side uses: a pool whose shard axis does not divide the mesh (or a 1-axis
+mesh of size 1) falls back to replicated — the serving engine prevents that
+case by padding shard slots to a device multiple (``_shard_slots``), and the
+``shard_map`` read path refuses non-divisible stacks loudly rather than
+serving from a silently replicated layout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .sharding import INDEX_RULES, index_mesh, spec_for
+
+__all__ = ["MESH_AXIS", "REPLICATED_FIELDS", "index_mesh",
+           "mesh_num_devices", "stacked_spec", "stacked_sharding",
+           "place_stacked"]
+
+MESH_AXIS = "shards"
+
+# Operand-dict fields every device needs in full (module docstring); any
+# non-array leaf (snap_token, bounds_version, n_live) passes through as-is.
+REPLICATED_FIELDS = frozenset({"bounds", "leaf_next_chain", "ov_pack"})
+
+
+def mesh_num_devices(mesh: Optional[Mesh]) -> int:
+    """Device count along the index mesh's shard axis (0 = no mesh)."""
+    if mesh is None:
+        return 0
+    return int(mesh.shape[MESH_AXIS])
+
+
+def stacked_spec(name: str, shape, mesh: Mesh) -> PartitionSpec:
+    """PartitionSpec for one stacked-operand field: leading shard axis mapped
+    through ``INDEX_RULES`` (with spec_for's divisibility fallback), trailing
+    axes replicated; the fields of ``REPLICATED_FIELDS`` fully replicated."""
+    if name in REPLICATED_FIELDS:
+        return PartitionSpec()
+    axes = (MESH_AXIS,) + (None,) * (len(shape) - 1)
+    return spec_for(shape, axes, mesh, INDEX_RULES)
+
+
+def stacked_sharding(name: str, shape, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, stacked_spec(name, shape, mesh))
+
+
+def place_stacked(stk: dict, mesh: Mesh) -> dict:
+    """Place a ``stacked_device_arrays`` dict (or any subset of its fields)
+    on the index mesh: every ``(S, ...)`` pool sharded on its leading axis,
+    ``REPLICATED_FIELDS`` replicated, scalar leaves untouched."""
+    out = {}
+    for name, v in stk.items():
+        if hasattr(v, "shape") and v.ndim >= 1:
+            out[name] = jax.device_put(v, stacked_sharding(name, v.shape,
+                                                           mesh))
+        else:
+            out[name] = v
+    return out

@@ -42,6 +42,14 @@ PARAM_RULES: dict[str, AxisSpec] = {
     "state": None,
 }
 
+# The learned-index serving side (DESIGN.md §13): the stacked (S, ...) shard
+# pools of ``core.device_index.stack_device_indexes`` shard their leading
+# shard axis across a 1-D index mesh; everything else (boundary table,
+# overlay pack, queries) stays replicated.
+INDEX_RULES: dict[str, AxisSpec] = {
+    "shards": "shards",
+}
+
 ACT_RULES: dict[str, AxisSpec] = {
     "batch": ("pod", "data"),
     "moe_group": ("pod", "data", "model"),  # fully chip-local MoE dispatch
@@ -129,6 +137,25 @@ def named_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
     if rules is None:
         rules = PARAM_RULES if params else ACT_RULES
     return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def index_mesh(n_devices: Optional[int] = None, *,
+               devices: Optional[Sequence] = None) -> Mesh:
+    """1-D device mesh for stacked-shard-pool placement (axis ``'shards'``,
+    DESIGN.md §13).  ``n_devices`` takes a prefix of the available devices
+    (default: all of them) — the serving engines pass the mesh through to the
+    per-device ``shard_map`` read/install paths in ``core.lookup``."""
+    import numpy as np
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(
+                f"index_mesh: n_devices={n_devices} outside "
+                f"[1, {len(devices)}] available devices")
+        devices = devices[:n_devices]
+    return Mesh(np.array(devices), ("shards",))
 
 
 def shard_acts(x: jax.Array, *axes: Optional[str]) -> jax.Array:

@@ -38,8 +38,20 @@ pow2+headroom (placeholder mirrors + UINT64_MAX bounds pads), so a
 split/merge within capacity changes no jitted read shape; the boundary table
 is versioned (``RangePartition.pin``/``unpin``) so an in-flight step routes
 and scans entirely on the version it began on.
+
+``mesh=`` places the stacked pools on a 1-D device mesh (DESIGN.md §13,
+``repro.parallel.index_mesh``): each device holds only its own shards' pool
+slices, reads run as per-device local traversals under ``shard_map``
+(all-gathering only the (B,)-shaped results), and shard installs — including
+the async compaction and repartition swaps above — write to exactly the
+device owning the refreshing shard.  Shard slots pad to a device multiple so
+the leading axis always divides the mesh; request semantics are unchanged
+(property-tested against the single-device engine in
+``tests/test_mesh_placement.py``).
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -61,19 +73,38 @@ class ShardedIndexEngine(BaseIndexEngine):
                  auto_compact: bool = True, backend: str = "auto",
                  async_compact: bool = True, repartition: bool = False,
                  split_ratio: float = 4.0, min_split_items: int = 128,
-                 repartition_check_every: int = 1):
-        from ..core.lookup import (lookup_backend_fns, resolve_read_backend,
+                 repartition_check_every: int = 1, mesh=None):
+        from ..core.lookup import (lookup_backend_fns,
+                                   mesh_lookup_backend_fns,
+                                   resolve_read_backend,
                                    scan_batch_sharded_overlay,
                                    stacked_device_arrays,
-                                   update_stacked_shard)
+                                   update_stacked_shard,
+                                   update_stacked_shard_mesh)
         super().__init__()
         # point lookups dispatch by backend (vmapped jnp vs the fused Pallas
         # kernel's in-kernel route — DESIGN.md §10); scans stay jnp
         self.read_backend = resolve_read_backend(backend)
-        self._lookup = lookup_backend_fns(backend, sharded=True)
-        self._scan = scan_batch_sharded_overlay
-        self._stacked_device_arrays = stacked_device_arrays
-        self._update_stacked_shard = update_stacked_shard
+        self.mesh = mesh
+        if mesh is None:
+            self._lookup = lookup_backend_fns(backend, sharded=True)
+            self._scan = scan_batch_sharded_overlay
+            self._stacked_device_arrays = stacked_device_arrays
+            self._update_stacked_shard = update_stacked_shard
+        else:
+            # mesh placement (DESIGN.md §13): stacked pools shard their
+            # leading axis across the index mesh, reads/installs go through
+            # the per-device shard_map twins, and every stack build places
+            # its pools before serving from them
+            from ..parallel.index_placement import place_stacked
+            self._mesh_lookup = mesh_lookup_backend_fns(backend, mesh)
+            self._lookup = self._mesh_lookup_entry
+            self._scan = self._mesh_scan_entry
+            self._stacked_device_arrays = (
+                lambda sdi, version=0: place_stacked(
+                    stacked_device_arrays(sdi, version), mesh))
+            self._update_stacked_shard = functools.partial(
+                update_stacked_shard_mesh, mesh)
         self.part = part
         self.gamma = gamma
         self.auto_compact = auto_compact
@@ -286,12 +317,26 @@ class ShardedIndexEngine(BaseIndexEngine):
         headroom, ratcheted so it never shrinks — splits/merges within
         capacity change no stacked shape and therefore trigger no read-path
         recompile (DESIGN.md §12).  0 (exact-fit) when repartitioning is
-        off, preserving the frozen-partition engine's layout bit-for-bit."""
-        if not self.repartition:
+        off, preserving the frozen-partition engine's layout bit-for-bit.
+
+        With a mesh, slots additionally round up to a device multiple so the
+        stacked leading axis always divides the mesh (DESIGN.md §13) — the
+        placeholder slots carry UINT64_MAX bounds, so routing never sends a
+        real query to a padding device."""
+        D = self._mesh_devices()
+        if not self.repartition and D <= 1:
             return 0
-        self._min_slots = max(self._min_slots,
-                              next_pow2(n + max(n // 4, 1)))
+        base = next_pow2(n + max(n // 4, 1)) if self.repartition else n
+        if D > 1:
+            base = -(-base // D) * D
+        self._min_slots = max(self._min_slots, base)
         return self._min_slots
+
+    def _mesh_devices(self) -> int:
+        if self.mesh is None:
+            return 0
+        from ..parallel.index_placement import mesh_num_devices
+        return mesh_num_devices(self.mesh)
 
     def _maybe_repartition(self) -> None:
         """Load monitor + trigger policy, sampled in ``_begin_step``
@@ -573,9 +618,85 @@ class ShardedIndexEngine(BaseIndexEngine):
         return {"ov_pack": jnp.asarray(pack), "ov_token": new_snap_token()}
 
     # ------------------------------------------------------------- read path
-    # qcap stays at its always-safe default (the padded batch size): a
-    # tighter per-batch lane capacity saves vmapped work but costs one jit
-    # compile per distinct value, which dominates on mixed traffic.
+    # Without a mesh, qcap stays at its always-safe default (the padded
+    # batch size): a tighter per-batch lane capacity saves vmapped work but
+    # costs one jit compile per distinct value, which dominates on mixed
+    # traffic.  WITH a mesh, a tight qcap is the point: each device's
+    # traversal costs S_local*qcap lanes, so the pow2-bucketed routing bound
+    # below turns shard locality into proportionally less work per device
+    # (one compile per pow2 bucket, a handful over an engine's lifetime).
+    def _mesh_route(self, q, snap):
+        """Host-side routing of one read batch against the SNAPSHOT's
+        boundary table (during an in-flight repartition the pinned snapshot
+        may trail ``self.sdi``; routing and traversal must agree).  Returns
+        (sid, qcap, counting-sort order, per-query lane) with u64-max
+        sentinels parked on a virtual shard S (no lane)."""
+        qn = np.asarray(q).astype(np.uint64)
+        Q = int(qn.shape[0])
+        bounds = np.asarray(snap["bounds"])
+        S = int(bounds.shape[0]) + 1
+        real = qn != np.uint64(UINT64_MAX)
+        sid = np.searchsorted(bounds, qn, side="left").astype(np.int64)
+        lsid = np.where(real, sid, S)
+        order = np.argsort(lsid, kind="stable")
+        lsid_s = lsid[order]
+        counts = np.bincount(lsid_s, minlength=S + 1)
+        mx = int(counts[:S].max()) if real.any() else 0
+        qcap = min(next_pow2(max(mx, 8)), Q)
+        offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        lane = np.arange(Q) - offs[lsid_s]
+        return qn, sid, qcap, order, lsid_s, lane
+
+    def _mesh_qcap(self, q, snap=None) -> int:
+        """Pow2-bucketed per-shard routing bound for this read batch."""
+        return self._mesh_route(q, snap if snap is not None else self.stk)[2]
+
+    def _mesh_lookup_entry(self, snap, ovr, q, height: int = 3):
+        if self.read_backend != "jnp":
+            # fused kernel: routing/packing happens in-graph per device
+            return self._mesh_lookup(snap, ovr, q, height=height,
+                                     qcap=self._mesh_qcap(q, snap))
+        # jnp path: scatter queries by owning shard on the HOST, hand each
+        # device only its (S_local, qcap) lane slice, and invert the
+        # permutation on the gathered (S, qcap) result mats — per-device
+        # work is pure traversal (DESIGN.md §13)
+        import jax.numpy as jnp
+        from ..core.lookup import (lookup_batch_sharded_mesh_packed,
+                                   overlay_probe_jit)
+        qn, sid, qcap, order, lsid_s, lane = self._mesh_route(q, snap)
+        Q = int(qn.shape[0])
+        S = int(np.asarray(snap["bounds"]).shape[0]) + 1
+        ok = (lsid_s < S) & (lane < qcap)
+        flat = np.where(ok, lsid_s * qcap + lane, S * qcap)
+        q_mat = np.full(S * qcap + 1, np.uint64(UINT64_MAX), np.uint64)
+        q_mat[flat] = np.where(ok, qn[order], np.uint64(UINT64_MAX))
+        q_mat = q_mat[:-1].reshape(S, qcap)
+        pay_m, found_m, gleaf_m = lookup_batch_sharded_mesh_packed(
+            self.mesh, snap, jnp.asarray(q_mat), height=height)
+        hit, tomb, opay = overlay_probe_jit(ovr, jnp.asarray(qn))
+
+        def unpack(m, dtype):
+            v = np.append(np.asarray(m).reshape(-1), dtype(0))[flat]
+            out = np.zeros(Q, dtype)
+            out[order] = v
+            return out
+
+        pay = unpack(pay_m, np.uint64)
+        found = unpack(found_m, np.int64).astype(bool)
+        hit, tomb = np.asarray(hit), np.asarray(tomb)
+        live = hit & ~tomb
+        pay = np.where(live, np.asarray(opay), pay)
+        found = np.where(hit, live, found)
+        return np.where(found, pay, np.uint64(0)), found, \
+            unpack(gleaf_m, np.int64)
+
+    def _mesh_scan_entry(self, snap, ovr, q, count: int = 100,
+                         height: int = 3, ov_bound=None):
+        from ..core.lookup import scan_batch_sharded_overlay_mesh
+        return scan_batch_sharded_overlay_mesh(
+            self.mesh, snap, ovr, q, count=count, height=height,
+            ov_bound=ov_bound, qcap=self._mesh_qcap(q, snap))
+
     def _snap(self) -> dict:
         return self.stk
 
@@ -595,6 +716,7 @@ class ShardedIndexEngine(BaseIndexEngine):
         return {
             **super().stats(),
             "read_backend": self.read_backend,
+            "mesh_devices": self._mesh_devices(),
             "num_shards": self.num_shards,
             "overlay_len": sum(sh.overlay_live() for sh in self.shards),
             "compactions": self.compactions,

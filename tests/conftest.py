@@ -1,12 +1,60 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
-host's real (single) device; only launch/dryrun.py forces 512 devices."""
+host's real (single) device; only launch/dryrun.py forces 512 devices, and
+the ``device_count`` fixture below forces N devices in a SUBPROCESS so mesh
+tests can run on CPU-only CI without contaminating this process's jax."""
+import os
+import pathlib
+import subprocess
+import sys
+
 import numpy as np
 import pytest
+
+_TESTS_DIR = pathlib.Path(__file__).resolve().parent
+_SRC_DIR = _TESTS_DIR.parent / "src"
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def device_count():
+    """Run a python script under ``--xla_force_host_platform_device_count=n``
+    in a fresh subprocess (jax pins its device topology at import, so the
+    flag cannot be applied in-process once any test has touched jax).
+
+    Usage: ``out = device_count(8, "mesh_equiv_driver.py", "mixed", "4")``.
+    Skips when the interpreter cannot be spawned (sandboxed CI), fails the
+    calling test when the script exits non-zero, returns its stdout."""
+
+    def run(n: int, script, *argv: object, timeout: float = 1500.0) -> str:
+        path = pathlib.Path(script)
+        if not path.is_absolute():
+            path = _TESTS_DIR / path
+        env = dict(os.environ)
+        flags = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={int(n)}"
+        ).strip()
+        env["PYTHONPATH"] = os.pathsep.join(
+            [str(_SRC_DIR), str(_TESTS_DIR)]
+            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        try:
+            proc = subprocess.run(
+                [sys.executable, str(path), *map(str, argv)],
+                capture_output=True, text=True, timeout=timeout, env=env)
+        except (OSError, subprocess.TimeoutExpired) as e:
+            pytest.skip(f"forced-device subprocess unavailable: {e!r}")
+        if proc.returncode != 0:
+            pytest.fail(
+                f"{path.name} {' '.join(map(str, argv))} exited "
+                f"{proc.returncode}\n--- stdout ---\n{proc.stdout[-4000:]}"
+                f"\n--- stderr ---\n{proc.stderr[-4000:]}")
+        return proc.stdout
+
+    return run
 
 
 @pytest.fixture(scope="session")

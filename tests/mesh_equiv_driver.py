@@ -1,0 +1,227 @@
+"""Subprocess driver for the mesh-placement equivalence properties.
+
+Launched by tests through the ``device_count`` conftest fixture with
+``--xla_force_host_platform_device_count`` set, so an N-device index mesh
+exists on CPU-only CI.  Each scenario asserts internally and prints an
+``OK <scenario>`` line; any assertion error exits non-zero and the fixture
+fails the calling test with this process's output.
+
+    python mesh_equiv_driver.py <scenario>[,<scenario>...] <D>[,<D>...]
+
+Scenarios:
+
+* ``func``  — function-level parity: ``lookup_batch_sharded_mesh`` /
+  ``scan_batch_sharded_mesh`` vs their single-device twins on the same
+  stacked pools (pay/found/global-leaf/sid, masked scan triples).
+* ``mixed`` — engine property: a mesh-placed ``ShardedIndexEngine`` answers
+  a randomized mixed get/insert/delete/scan stream request-for-request like
+  the single-device engine, including across an async compaction drain.
+* ``split`` — same property with ``repartition=True`` and a split forced
+  mid-stream (hand-pumped build pool), vs a frozen-partition oracle.
+* ``fused`` — the fused Pallas kernel (interpret mode) per-device-local
+  under shard_map vs the jnp oracle, engine-level.
+"""
+import sys
+
+import numpy as np
+
+import jax
+
+from test_async_compaction import ManualExecutor  # noqa: E402
+
+from repro.core import Aulid, AulidConfig, BlockDevice, partition_bulkload
+from repro.core.lookup import (lookup_batch_sharded, lookup_batch_sharded_mesh,
+                               scan_batch_sharded, scan_batch_sharded_mesh)
+from repro.core.workloads import make_dataset, payloads_for
+from repro.parallel import index_mesh
+from repro.serving import ShardedIndexEngine
+from repro.serving import index_engine as ie_mod
+from repro.serving.index_engine import pad_queries
+
+SMALL_GEOM = dict(leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15)
+
+
+def _dataset(n=1500):
+    keys = make_dataset("covid", n, seed=1)
+    return keys, payloads_for(keys)
+
+
+def _mk(keys, pay, num_shards=3, mesh=None, **kw):
+    part = partition_bulkload(keys, pay, num_shards,
+                              cfg=AulidConfig(**SMALL_GEOM))
+    kw.setdefault("backend", "jnp")
+    return ShardedIndexEngine(part, gamma=0.05, mesh=mesh, **kw)
+
+
+def _queries(keys, rng, q=64):
+    lo, hi = int(keys[0]), int(keys[-1])
+    mix = np.concatenate([
+        rng.choice(keys, q // 2),
+        rng.integers(lo, hi + (hi - lo) // 4, q // 4).astype(np.uint64),
+        rng.integers(0, 2**63, q // 4).astype(np.uint64)])
+    return pad_queries(np.sort(mix))
+
+
+def scenario_func(D):
+    keys, pay = _dataset()
+    base = _mk(keys, pay)
+    mesh = index_mesh(D)
+    meng = _mk(keys, pay, mesh=mesh)
+    snap_b, snap_m = base._snap(), meng._snap()
+    h = base._height()
+    assert meng._height() == h
+    rng = np.random.default_rng(11)
+    for trial in range(3):
+        q = _queries(keys, rng)
+        pb, fb, gb, sb = lookup_batch_sharded(snap_b, q, height=h)
+        pm, fm, gm, sm = lookup_batch_sharded_mesh(mesh, snap_m, q, height=h)
+        np.testing.assert_array_equal(np.asarray(fb), np.asarray(fm))
+        np.testing.assert_array_equal(np.asarray(pb), np.asarray(pm))
+        fbn = np.asarray(fb)
+        np.testing.assert_array_equal(np.asarray(gb)[fbn],
+                                      np.asarray(gm)[fbn])
+        real = np.asarray(q) != np.uint64(2**64 - 1)
+        np.testing.assert_array_equal(np.asarray(sb)[real],
+                                      np.asarray(sm)[real])
+        kb, vb, mb = scan_batch_sharded(snap_b, q, count=12, height=h)
+        km, vm, mm = scan_batch_sharded_mesh(mesh, snap_m, q, count=12,
+                                             height=h)
+        np.testing.assert_array_equal(np.asarray(mb), np.asarray(mm))
+        mbn = np.asarray(mb)
+        np.testing.assert_array_equal(np.asarray(kb)[mbn],
+                                      np.asarray(km)[mbn])
+        np.testing.assert_array_equal(np.asarray(vb)[mbn],
+                                      np.asarray(vm)[mbn])
+    print(f"OK func D={D}")
+
+
+def _check_pairs(pairs):
+    # requests are compared AFTER step() fills results — a pending pair is
+    # dataclass-equal regardless of what it would eventually answer
+    for a, b in pairs:
+        assert a.done and b.done, (a.op, a.key)
+        assert a.result == b.result, (a.op, a.key, a.result, b.result)
+
+
+def _mixed_stream(base, meng, keys, seed, steps=3):
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        pairs = []
+        for i in range(18):
+            k = (int(rng.choice(keys)) if rng.random() < 0.6
+                 else int(rng.integers(0, 2**50)))
+            pairs.append((base.get(k), meng.get(k)))
+        for i in range(10):
+            k = (int(rng.integers(0, 2**50)) if rng.random() < 0.7
+                 else int(rng.choice(keys)))
+            p = step * 100 + i
+            pairs.append((base.insert(k, p), meng.insert(k, p)))
+        for i in range(5):
+            k = (int(rng.choice(keys)) if rng.random() < 0.6
+                 else int(rng.integers(0, 2**50)))
+            pairs.append((base.delete(k), meng.delete(k)))
+        for i in range(4):
+            k = int(rng.choice(keys)) if rng.random() < 0.8 \
+                else int(rng.integers(0, 2**50))
+            c = int(rng.integers(9, 16))
+            pairs.append((base.scan(k, c), meng.scan(k, c)))
+        base.step()
+        meng.step()
+        _check_pairs(pairs)
+
+
+def scenario_mixed(D):
+    keys, pay = _dataset()
+    base = _mk(keys, pay)
+    meng = _mk(keys, pay, mesh=index_mesh(D))
+    assert meng.stats()["mesh_devices"] == D
+    assert base.stats()["mesh_devices"] == 0
+    _mixed_stream(base, meng, keys, seed=7)
+    base.drain_compactions()
+    meng.drain_compactions()
+    _mixed_stream(base, meng, keys, seed=13, steps=1)
+    pairs = [(base.get(int(k)), meng.get(int(k))) for k in keys[:60]]
+    base.step()
+    meng.step()
+    _check_pairs(pairs)
+    print(f"OK mixed D={D}")
+
+
+def scenario_split(D):
+    keys, pay = _dataset(600)
+    pool = ManualExecutor()
+    old = ie_mod._COMPACT_POOL
+    ie_mod._COMPACT_POOL = pool
+    try:
+        frz = _mk(keys, pay)
+        rep = _mk(keys, pay, mesh=index_mesh(D), repartition=True,
+                  split_ratio=1e9, min_split_items=16)
+        rng = np.random.default_rng(5)
+        for step in range(4):
+            _mixed_stream(frz, rep, keys, seed=100 + step, steps=1)
+            pool.pump()
+            if step % 2 == 1:
+                rep.drain_compactions()
+                sizes = [sh.idx.n_items for sh in rep.shards]
+                assert rep.request_split(
+                    max(range(len(sizes)), key=sizes.__getitem__))
+        pool.pump()
+        rep.drain_compactions()
+        frz.drain_compactions()
+        pairs = [(frz.get(int(k)), rep.get(int(k))) for k in keys[::7]]
+        frz.step()
+        rep.step()
+        _check_pairs(pairs)
+        assert rep.stats()["num_shards"] > 3
+        S = rep._snap()["meta"].shape[0]
+        assert S % D == 0, (S, D)
+        for sh in rep.shards:
+            sh.idx.check_invariants()
+    finally:
+        ie_mod._COMPACT_POOL = old
+    print(f"OK split D={D}")
+
+
+def scenario_fused(D):
+    keys, pay = _dataset()
+    jref = _mk(keys, pay)
+    feng = _mk(keys, pay, mesh=index_mesh(D), backend="fused_interpret")
+    rng = np.random.default_rng(3)
+    pairs = []
+    for i in range(40):
+        k = (int(rng.choice(keys)) if rng.random() < 0.5
+             else int(rng.integers(0, 2**63)))
+        pairs.append((jref.get(k), feng.get(k)))
+    for i in range(12):
+        k = int(rng.integers(0, 2**50))
+        pairs.append((jref.insert(k, i), feng.insert(k, i)))
+    for k in keys[:8]:
+        pairs.append((jref.delete(int(k)), feng.delete(int(k))))
+    jref.step()
+    feng.step()
+    _check_pairs(pairs)
+    pairs = [(jref.get(int(k)), feng.get(int(k)))
+             for k in list(keys[:30]) + [0, 2**50 + 1, 2**63]]
+    jref.step()
+    feng.step()
+    _check_pairs(pairs)
+    print(f"OK fused D={D}")
+
+
+SCENARIOS = {"func": scenario_func, "mixed": scenario_mixed,
+             "split": scenario_split, "fused": scenario_fused}
+
+
+def main(argv):
+    names = argv[1].split(",") if len(argv) > 1 else list(SCENARIOS)
+    dcounts = [int(d) for d in argv[2].split(",")] if len(argv) > 2 else [4]
+    print(f"devices={jax.device_count()} scenarios={names} D={dcounts}")
+    for D in dcounts:
+        assert D <= jax.device_count(), (D, jax.device_count())
+        for name in names:
+            SCENARIOS[name](D)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -1,0 +1,71 @@
+"""BENCH_serving.json collation: sections must carry measured rows.
+
+Regression for the meta-only `mixed_serving` section: the collator used to
+emit {emitter, generated, meta} — a parameter echo with no results — and
+present it as benchmark output.  `_check_section` now rejects any freshly
+built section without a result payload, and the mixed-serving /
+multi-device emitters are checked to actually carry their rows through.
+"""
+import json
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+def test_check_section_rejects_meta_only():
+    with pytest.raises(ValueError, match="no result payload"):
+        bench_run._check_section("mixed_serving", {
+            "emitter": "mixed_serving", "generated": "now",
+            "meta": {"scale": "small"}})
+
+
+def test_check_section_accepts_payload():
+    sec = {"emitter": "mixed_serving", "generated": "now", "meta": {},
+           "datasets": {"covid": {}}}
+    assert bench_run._check_section("mixed_serving", sec) is sec
+
+
+def _emit_with(tmp_path, monkeypatch, name, doc):
+    import benchmarks.common as common
+    results = tmp_path / "bench"
+    results.mkdir()
+    (results / f"{name}.json").write_text(json.dumps(doc))
+    monkeypatch.setattr(common, "RESULTS_DIR", results)
+    monkeypatch.setattr(bench_run, "REPO_ROOT", tmp_path)
+    return bench_run.emit_bench_serving({name})
+
+
+def test_mixed_serving_rows_emitted(tmp_path, monkeypatch):
+    rows = [
+        {"dataset": "covid", "mode": "rebuild", "inserts": 100,
+         "compactions": 0, "maintain_s": 1.0, "read_s": 0.1,
+         "amortized_us_per_insert": 50.0, "speedup_vs_rebuild": 1.0},
+        {"dataset": "covid", "mode": "overlay", "inserts": 100,
+         "compactions": 2, "maintain_s": 0.1, "read_s": 0.1,
+         "amortized_us_per_insert": 5.0, "speedup_vs_rebuild": 10.0},
+    ]
+    out = _emit_with(tmp_path, monkeypatch, "mixed_serving",
+                     {"rows": rows, "meta": {"scale": "small"}})
+    sec = json.loads(out.read_text())["sections"]["mixed_serving"]
+    ds = sec["datasets"]["covid"]
+    assert ds["rebuild"]["amortized_us_per_insert"] == 50.0
+    assert ds["overlay"]["amortized_us_per_insert"] == 5.0
+    assert ds["overlay_speedup_vs_rebuild"] == 10.0
+
+
+def test_multi_device_rows_emitted(tmp_path, monkeypatch):
+    rows = [{"engine": "mesh_4dev", "devices": 4, "shard_slots": 16,
+             "per_shard_qcap": 512, "lanes_per_device": 2048,
+             "read_throughput_ops_s": 9e5,
+             "speedup_vs_single_device": 3.0}]
+    out = _emit_with(tmp_path, monkeypatch, "multi_device_serving",
+                     {"rows": rows, "meta": {}})
+    sec = json.loads(out.read_text())["sections"]["multi_device"]
+    assert sec["engines"]["mesh_4dev"]["speedup_vs_single_device"] == 3.0
+
+
+def test_meta_only_section_fails_loudly(tmp_path, monkeypatch):
+    with pytest.raises(ValueError, match="mixed_serving"):
+        _emit_with(tmp_path, monkeypatch, "mixed_serving",
+                   {"rows": [], "meta": {"scale": "small"}})

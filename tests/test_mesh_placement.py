@@ -1,0 +1,137 @@
+"""Mesh placement of the stacked shard pools (DESIGN.md §13).
+
+Three layers, cheapest first:
+
+* rule resolution — ``INDEX_RULES`` through ``spec_for`` on a shape-only
+  FakeMesh (divisibility fallback, no-reuse, replicated operands);
+* host-side invariants — placeholder shard slots behind u64-max bounds on
+  the trailing device slice, the engine's slot ratchet rounding to a device
+  multiple;
+* the real thing — the equivalence scenarios of ``mesh_equiv_driver.py``
+  in a forced-host-device subprocess (``device_count`` fixture), so the
+  sharded-on-mesh engine is property-tested against the single-device
+  engine request for request on CPU-only CI.
+"""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import AulidConfig, partition_bulkload
+from repro.core.device_index import UINT64_MAX
+from repro.core.workloads import make_dataset, payloads_for
+from repro.parallel import INDEX_RULES, index_mesh, spec_for
+from repro.parallel.index_placement import (REPLICATED_FIELDS,
+                                            mesh_num_devices, stacked_spec)
+from repro.serving import ShardedIndexEngine
+
+SMALL_GEOM = dict(leaf_capacity=16, pa_classes=(4, 8), bt_child_capacity=15)
+
+
+class FakeMesh:
+    """Shape-only stand-in so rule tests can use production axis sizes."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH8 = FakeMesh({"shards": 8})
+
+
+class TestIndexRules:
+    def test_pool_leading_axis_sharded(self):
+        # (S, slot) pool, S divisible -> leading axis onto 'shards'
+        assert spec_for((16, 512), ("shards", None), MESH8,
+                        INDEX_RULES) == P("shards", None)
+        assert stacked_spec("leaf_keys", (16, 64, 16),
+                            MESH8) == P("shards", None, None)
+
+    def test_divisibility_fallback_replicates(self):
+        # S < n_devices (or any non-multiple) -> replicated, never a
+        # partial split
+        assert spec_for((3, 512), ("shards", None), MESH8,
+                        INDEX_RULES) == P(None, None)
+        assert stacked_spec("leaf_keys", (12, 64, 16), MESH8) == P(
+            None, None, None)
+
+    def test_no_axis_reuse(self):
+        # a second 'shards'-labeled dim must not take the axis twice
+        assert spec_for((16, 16), ("shards", "shards"), MESH8,
+                        INDEX_RULES) == P("shards", None)
+
+    def test_replicated_operands(self):
+        for f in sorted(REPLICATED_FIELDS):
+            assert stacked_spec(f, (16,), MESH8) == P()
+
+    def test_mesh_num_devices(self):
+        assert mesh_num_devices(None) == 0
+        assert mesh_num_devices(MESH8) == 8
+
+    def test_index_mesh_validates_device_count(self):
+        m = index_mesh(1)
+        assert mesh_num_devices(m) == 1
+        with pytest.raises(ValueError, match="n_devices"):
+            index_mesh(10_000)
+        with pytest.raises(ValueError, match="n_devices"):
+            index_mesh(0)
+
+
+class TestHostSideInvariants:
+    def _engine(self, **kw):
+        keys = make_dataset("covid", 800, seed=1)
+        part = partition_bulkload(keys, payloads_for(keys), 3,
+                                  cfg=AulidConfig(**SMALL_GEOM))
+        return ShardedIndexEngine(part, gamma=0.05, backend="jnp", **kw)
+
+    def test_slot_ratchet_rounds_to_device_multiple(self, monkeypatch):
+        eng = self._engine(repartition=True)
+        monkeypatch.setattr(eng, "_mesh_devices", lambda: 4)
+        for n in (3, 4, 5, 9):
+            slots = eng._shard_slots(n)
+            assert slots % 4 == 0 and slots >= n
+        # the ratchet never shrinks
+        assert eng._shard_slots(3) >= eng._shard_slots(9)
+
+    def test_slot_ratchet_pads_even_without_repartition(self, monkeypatch):
+        # a mesh engine with a frozen partition still pads S to a device
+        # multiple — divisibility is a placement requirement, not a
+        # repartition artifact
+        eng = self._engine()
+        monkeypatch.setattr(eng, "_mesh_devices", lambda: 4)
+        assert eng._shard_slots(3) % 4 == 0
+
+    def test_placeholders_behind_umax_bounds_on_last_slice(self):
+        eng = self._engine(repartition=True)
+        snap = eng._snap()
+        S = int(snap["meta"].shape[0])
+        real = len(eng.shards)
+        assert S > real, "ratchet should have padded placeholder slots"
+        bounds = np.asarray(snap["bounds"])
+        # padded slots occupy the TAIL of the stack: for any D dividing S
+        # they land on the last device's slice, and their routing bounds
+        # are u64-max so no real query ever reaches them
+        assert (bounds[real - 1:] == np.uint64(UINT64_MAX)).all()
+        assert (bounds[: real - 1] < np.uint64(UINT64_MAX)).all()
+        meta = np.asarray(snap["meta"])
+        assert (meta[real:, 0] == -1).all(), \
+            "placeholder slots carry root_node=-1 (no traversal)"
+
+
+class TestMeshEquivalence:
+    def test_mesh_engine_equivalent_fast(self, device_count):
+        """Fast-suite anchor: function parity + mixed stream with an async
+        compaction drain + forced splits mid-stream, at 4 devices."""
+        out = device_count(8, "mesh_equiv_driver.py", "func,mixed,split", "4")
+        assert "ALL OK" in out
+
+    @pytest.mark.slow
+    def test_mesh_engine_equivalent_device_sweep(self, device_count):
+        out = device_count(8, "mesh_equiv_driver.py", "func,mixed,split",
+                           "1,2")
+        assert "ALL OK" in out
+
+    @pytest.mark.slow
+    def test_fused_kernel_mesh_parity(self, device_count):
+        """The fused Pallas kernel (interpret) per-device under shard_map
+        vs the jnp oracle, engine-level."""
+        out = device_count(8, "mesh_equiv_driver.py", "fused", "1,2,4")
+        assert "ALL OK" in out
