@@ -15,6 +15,15 @@ per-insert mirror-maintenance cost*:
 Correctness gate (the acceptance criterion): after EVERY compaction the
 overlay-enabled read path must be bit-identical to a fresh full rebuild on a
 probe batch (lookups and scans), which this module asserts inline.
+
+Write-path scenario (ISSUE 10, DESIGN.md §14): a write-heavy stream drives
+two ``IndexEngine`` twins — ``full_repack`` re-uploads the whole padded
+overlay pack every step (the pre-merge path, ``overlay_merge=False``) while
+``delta_merge`` ships only the step's sorted batch and merges it into the
+device-resident pack.  Reported per step: write-path H2D bytes and host
+(sort + pack) milliseconds.  Gate: at overlay fill >= 8x the write batch,
+the delta path must ship >= 5x fewer bytes per step; both engines must stay
+request-for-request identical, asserted inline every step.
 """
 from __future__ import annotations
 
@@ -35,6 +44,15 @@ READS_PER_STEP = 2_048     # amortizes worst (the ISSUE's failure mode)
 SCAN_PROBES = 64
 REPEATS = 5   # best-of-N: this container's CPU timing is noisy and the
               # baseline's O(n) rebuild cost is what the gate divides by
+
+# --- write-path scenario ---------------------------------------------------
+WP_STEPS = 48
+WP_BATCH = 64              # writes per step (the O(batch) the delta ships)
+WP_READS = 256             # mixed traffic: reads also verify equivalence
+WP_GAMMA = 0.1             # threshold > total inserts: no compaction, so the
+                           # overlay fill climbs monotonically past 8x batch
+WP_FILL_GATE = 8           # gate applies at fill >= WP_FILL_GATE * batch
+WP_BYTES_GATE = 5.0        # delta path must ship >= 5x fewer bytes/step
 
 
 def _probe_bit_identical(idx, di, ov, height, probe_q):
@@ -129,6 +147,89 @@ def _run_mode(mode: str, keys: np.ndarray, inserts: np.ndarray,
             "amortized_us_per_insert": 1e6 * maintain_s / n_inserts}
 
 
+def _write_path_rows(scale: str) -> tuple[list[dict], dict]:
+    """Write-heavy twin run: per-step H2D bytes + host ms, full-repack vs
+    delta-merge, request-for-request equivalence asserted every step."""
+    from repro.serving import IndexEngine
+    n = SCALE_N[scale]
+    keys = make_dataset("covid", n)
+    rng = np.random.default_rng(2)
+    inserts = np.unique(rng.integers(0, 2**50, WP_STEPS * WP_BATCH * 2)
+                        .astype(np.uint64))
+    rng.shuffle(inserts)
+    inserts = inserts[: WP_STEPS * WP_BATCH]
+    assert WP_STEPS * WP_BATCH < WP_GAMMA * n, \
+        "write-path scenario must not compact (fill must climb past the gate)"
+
+    def build(merge: bool) -> "IndexEngine":
+        idx = Aulid()
+        idx.bulkload(keys, payloads_for(keys))
+        return IndexEngine(idx, gamma=WP_GAMMA, backend="jnp",
+                           overlay_merge=merge)
+
+    engines = {"delta_merge": build(True), "full_repack": build(False)}
+    trace = {m: [] for m in engines}     # (fill_before, d_bytes, d_host_s)
+    wi = 0
+    for step in range(WP_STEPS):
+        batch = inserts[wi: wi + WP_BATCH]
+        wi += WP_BATCH
+        probes = np.concatenate(
+            [rng.choice(keys, WP_READS - len(batch)), batch])
+        results = {}
+        for mode, eng in engines.items():
+            fill = eng.shard.overlay_live()
+            s0 = eng.stats()
+            for k in batch:
+                eng.insert(int(k), int(k) + 3)
+            reqs = [eng.get(int(k)) for k in probes]
+            eng.step()
+            s1 = eng.stats()
+            trace[mode].append((fill,
+                                s1["write_h2d_bytes"] - s0["write_h2d_bytes"],
+                                s1["write_host_s"] - s0["write_host_s"]))
+            results[mode] = [r.result for r in reqs]
+        assert results["delta_merge"] == results["full_repack"], \
+            f"write-path engines diverged at step {step}"
+
+    # the gate applies where the old path's pain is: overlay fill well past
+    # the batch size, so a full re-upload moves >> O(batch) bytes
+    gate_steps = [i for i, (fill, _, _) in enumerate(trace["delta_merge"])
+                  if fill >= WP_FILL_GATE * WP_BATCH]
+    assert gate_steps, "scenario too short to reach the fill gate"
+    rows = []
+    mean = lambda xs: float(np.mean(xs)) if xs else 0.0
+    per_mode = {}
+    for mode, eng in engines.items():
+        tr = trace[mode]
+        s = eng.stats()
+        per_mode[mode] = {
+            "h2d_bytes_per_step": mean([tr[i][1] for i in gate_steps]),
+            "host_ms_per_step": 1e3 * mean([tr[i][2] for i in gate_steps]),
+        }
+        rows.append({
+            "dataset": "covid", "scenario": "write_path", "mode": mode,
+            "steps": WP_STEPS, "batch": WP_BATCH,
+            "gate_steps": len(gate_steps),
+            "h2d_bytes_per_step": round(per_mode[mode]["h2d_bytes_per_step"]),
+            "host_ms_per_step": round(per_mode[mode]["host_ms_per_step"], 3),
+            "total_h2d_bytes": int(s["write_h2d_bytes"]),
+            "overlay_fill_final": int(eng.shard.overlay_live()),
+            "overlay_merges": s["overlay_merges"],
+            "overlay_reseeds": s["overlay_reseeds"],
+        })
+    ratio = (per_mode["full_repack"]["h2d_bytes_per_step"]
+             / max(per_mode["delta_merge"]["h2d_bytes_per_step"], 1.0))
+    for r in rows:
+        r["bytes_ratio_vs_full_repack"] = (round(ratio, 1)
+                                           if r["mode"] == "delta_merge"
+                                           else 1.0)
+    meta = {"steps": WP_STEPS, "batch": WP_BATCH, "reads": WP_READS,
+            "gamma": WP_GAMMA, "fill_gate_x_batch": WP_FILL_GATE,
+            "gate_min_ratio": WP_BYTES_GATE,
+            "bytes_ratio": round(ratio, 1)}
+    return rows, meta
+
+
 def run(scale: str = "small") -> list[dict]:
     n = SCALE_N[scale]
     rows = []
@@ -152,22 +253,36 @@ def run(scale: str = "small") -> list[dict]:
                         if isinstance(v, float) else v) for k, v in r.items()},
                         "speedup_vs_rebuild": round(speedup, 1)
                         if r is ovl else 1.0})
-    save_results("mixed_serving", rows,
+    wp_rows, wp_meta = _write_path_rows(scale)
+    save_results("mixed_serving", rows + wp_rows,
                  {"scale": scale, "gamma": GAMMA, "steps": STEPS,
                   "writes_per_step": WRITES_PER_STEP,
-                  "reads_per_step": READS_PER_STEP})
+                  "reads_per_step": READS_PER_STEP,
+                  "write_path": wp_meta})
     print_table("Mixed read/write serving: amortized mirror-maintenance cost "
                 "per insert (overlay vs full rebuild per write batch)",
                 rows, ["dataset", "mode", "inserts", "compactions",
                        "amortized_us_per_insert", "read_s",
                        "speedup_vs_rebuild"])
+    print_table("Write path: per-step H2D bytes + host ms at overlay fill "
+                f">= {WP_FILL_GATE}x batch (full repack vs delta merge)",
+                wp_rows, ["mode", "steps", "batch", "gate_steps",
+                          "h2d_bytes_per_step", "host_ms_per_step",
+                          "total_h2d_bytes", "overlay_fill_final",
+                          "overlay_merges", "overlay_reseeds",
+                          "bytes_ratio_vs_full_repack"])
     sp = [r["speedup_vs_rebuild"] for r in rows if r["mode"] == "overlay"]
     geomean = float(np.prod(sp)) ** (1.0 / len(sp))
     print(f"\noverlay speedups {sp}, geometric mean {geomean:.1f}x "
           f"(acceptance gate: >= 5x)")
     assert geomean >= 5.0, \
         "acceptance criterion: >=5x lower amortized per-insert cost"
-    return rows
+    ratio = wp_meta["bytes_ratio"]
+    print(f"write-path H2D bytes/step ratio (full repack / delta merge) "
+          f"{ratio}x (acceptance gate: >= {WP_BYTES_GATE}x)")
+    assert ratio >= WP_BYTES_GATE, \
+        "acceptance criterion: >=5x lower per-step write-path H2D bytes"
+    return rows + wp_rows
 
 
 if __name__ == "__main__":

@@ -13,6 +13,11 @@ from .common import RESULTS_DIR, print_table, save_results
 DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 HBM_PER_CHIP = 16e9  # v5e
 
+# Host->device link bandwidth for the write-path ceiling: the serving write
+# path is host-fed (the sorted batch is packed on CPU and shipped over PCIe),
+# so its steps/s ceiling is the LINK, not HBM.  PCIe Gen4 x16-class.
+H2D_BW = 16e9
+
 
 def load_cells(mesh: str = "16x16") -> list[dict]:
     out = []
@@ -54,6 +59,31 @@ def fused_lookup_rows() -> list[dict]:
     return out
 
 
+def write_path_rows() -> list[dict]:
+    """Analytic write-bandwidth ceiling of the serving write path: steps/s
+    the H2D link alone allows at the per-step byte volume the
+    ``mixed_serving`` write-path scenario recorded — full repack re-ships
+    the whole overlay pack each step, the delta merge ships O(batch), so
+    the ceiling gap IS the point of the device-resident merge."""
+    p = RESULTS_DIR / "mixed_serving.json"
+    if not p.exists():
+        return []
+    out = []
+    for r in json.loads(p.read_text()).get("rows", []):
+        bps = r.get("h2d_bytes_per_step")
+        if r.get("scenario") != "write_path" or not bps:
+            continue
+        out.append({
+            "arch": "v5e-write-path",
+            "shape": f"{r.get('dataset', '?')}/{r['mode']}",
+            "h2d_bytes_per_step": bps,
+            "h2d_steps_ceiling": round(H2D_BW / bps),
+            "host_ms_per_step": r.get("host_ms_per_step"),
+            "status": "analytic",
+        })
+    return out
+
+
 def run(scale: str = "small") -> list[dict]:
     del scale
     rows = []
@@ -81,7 +111,8 @@ def run(scale: str = "small") -> list[dict]:
     multi = [r for r in load_cells("2x16x16")]
     n_multi_ok = sum(1 for r in multi if r["status"] == "ok")
     fused = fused_lookup_rows()
-    save_results("roofline", rows + fused, {
+    wpath = write_path_rows()
+    save_results("roofline", rows + fused + wpath, {
         "mesh": "16x16", "chips": 256,
         "multi_pod_cells_ok": n_multi_ok, "multi_pod_cells": len(multi)})
     if rows:
@@ -99,9 +130,14 @@ def run(scale: str = "small") -> list[dict]:
                     ["arch", "shape", "rows_dma_per_query",
                      "dma_bytes_per_query", "memory_qps_ceiling",
                      "measured_qps", "roofline_frac", "status"])
+    if wpath:
+        print_table("Serving write path — analytic H2D-link ceiling "
+                    "(from mixed_serving write-path bytes/step)", wpath,
+                    ["arch", "shape", "h2d_bytes_per_step",
+                     "h2d_steps_ceiling", "host_ms_per_step", "status"])
     print(f"\nmulti-pod 2x16x16 shard proof: {n_multi_ok}/{len(multi)} "
           f"cells compiled OK")
-    return rows + fused
+    return rows + fused + wpath
 
 
 if __name__ == "__main__":

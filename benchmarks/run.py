@@ -35,6 +35,7 @@ SERVING_SECTIONS = {
     "drift": "sharded_serving",
     "device_lookup": "device_lookup",
     "mixed_serving": "mixed_serving",
+    "write_path": "mixed_serving",
     "multi_device": "multi_device_serving",
 }
 
@@ -157,6 +158,11 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
     data = load("mixed_serving")
     if data is not None:
         rows = data.get("rows", [])
+        # the write-path rows are a separate scenario (mode is an engine
+        # write-path variant, not an overlay-vs-rebuild strategy) — they get
+        # their own section below, not a slot in the per-dataset table
+        wp = [r for r in rows if r.get("scenario") == "write_path"]
+        rows = [r for r in rows if r.get("scenario") != "write_path"]
         by_ds: dict[str, dict] = {}
         for row in rows:
             ent = by_ds.setdefault(row["dataset"], {})
@@ -170,10 +176,30 @@ def emit_bench_serving(fresh: set[str] | None = None) -> pathlib.Path | None:
             if row["mode"] == "overlay":
                 ent["overlay_speedup_vs_rebuild"] = \
                     row.get("speedup_vs_rebuild")
+        meta = {k: v for k, v in data.get("meta", {}).items()
+                if k != "write_path"}
         sections["mixed_serving"] = {"emitter": "mixed_serving",
                                      "generated": stamp,
-                                     "meta": data.get("meta", {}),
+                                     "meta": meta,
                                      "datasets": by_ds}
+        if wp:
+            wp_meta = data.get("meta", {}).get("write_path", {})
+            sections["write_path"] = {
+                "emitter": "mixed_serving", "generated": stamp,
+                "meta": wp_meta,
+                "bytes_ratio_gate": wp_meta.get("gate_min_ratio"),
+                "bytes_ratio": wp_meta.get("bytes_ratio"),
+                "modes": {row["mode"]: {
+                    "h2d_bytes_per_step": row.get("h2d_bytes_per_step"),
+                    "host_ms_per_step": row.get("host_ms_per_step"),
+                    "total_h2d_bytes": row.get("total_h2d_bytes"),
+                    "overlay_fill_final": row.get("overlay_fill_final"),
+                    "overlay_merges": row.get("overlay_merges"),
+                    "overlay_reseeds": row.get("overlay_reseeds"),
+                    "bytes_ratio_vs_full_repack":
+                        row.get("bytes_ratio_vs_full_repack"),
+                } for row in wp},
+            }
         changed = True
     data = load("multi_device_serving")
     if data is not None:

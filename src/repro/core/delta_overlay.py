@@ -23,6 +23,16 @@ upserts; AULID's duplicate-key multiset is exercised by the host-path tests):
 Host mutation is dict-based (O(1) per write); the sorted, padded device
 arrays are materialized lazily per engine step and cached until dirtied.
 Padded capacity grows geometrically so jitted consumers see few shapes.
+
+Write batching (DESIGN.md §14): every mutation also lands in a small
+*pending* buffer — the writes since the last device sync.  ``take_batch``
+drains it as one sorted (keys, payloads, tombstones) triple, which is all
+the serving engines ship to the device per step (O(batch) H2D; the
+device-resident pack absorbs it via the overlay-merge kernel).  The sorted
+host mirror is maintained *incrementally* from the same buffer
+(``np.searchsorted`` + insert of the sorted batch), so ``arrays()`` — the
+fallback/reseed path — costs O(n + batch log batch) per dirty step instead
+of the O(n log n) full ``argsort`` it used to pay.
 """
 from __future__ import annotations
 
@@ -58,13 +68,20 @@ class DeltaOverlay:
     read path constant for the overlay's whole lifetime (one compile).
     """
 
-    __slots__ = ("_map", "_cache", "_min_cap", "n_upserts", "n_tombstones",
-                 "uid", "version")
+    __slots__ = ("_map", "_cache", "_min_cap", "_pending", "_sorted",
+                 "n_upserts", "n_tombstones", "uid", "version")
 
     def __init__(self, min_capacity: int = MIN_CAPACITY) -> None:
         self._map: dict[int, tuple[int, bool]] = {}  # key -> (payload, tomb)
         self._cache: Optional[dict[str, np.ndarray]] = None
         self._min_cap = max(int(min_capacity), 1)
+        # writes since the last drain (take_batch/mark_synced) — the O(batch)
+        # delta the engines ship to the device-resident pack each step
+        self._pending: dict[int, tuple[int, bool]] = {}
+        # unpadded sorted mirror of (_map minus _pending); None after
+        # merge_under, forcing one full rebuild on the rare abort path
+        self._sorted: Optional[tuple[np.ndarray, np.ndarray, np.ndarray]] = (
+            np.empty(0, np.uint64), np.empty(0, np.uint64), np.empty(0, bool))
         self.n_upserts = 0
         self.n_tombstones = 0
         self.uid = next(_OVERLAY_UIDS)   # never-recycled identity (module doc)
@@ -90,7 +107,9 @@ class DeltaOverlay:
 
     # ------------------------------------------------------------- mutation
     def record_insert(self, key: int, payload: int) -> None:
-        self._map[int(key)] = (int(payload), False)
+        ent = (int(payload), False)
+        self._map[int(key)] = ent
+        self._pending[int(key)] = ent
         self._cache = None
         self.version += 1
         self.n_upserts += 1
@@ -99,14 +118,25 @@ class DeltaOverlay:
 
     def record_delete(self, key: int) -> None:
         self._map[int(key)] = (0, True)
+        self._pending[int(key)] = (0, True)
         self._cache = None
         self.version += 1
         self.n_tombstones += 1
 
     def clear(self) -> None:
-        """Drop all entries (after a compaction folded them into a snapshot)."""
+        """Drop all entries (after a compaction folded them into a snapshot).
+
+        A cleared overlay is semantically a FRESH overlay, so it takes a
+        fresh uid: consumers that seeded device state from the old contents
+        (the merged device pack, DESIGN.md §14) key on uid and must observe
+        a structural change here, not just a version bump — otherwise the
+        pre-compaction entries would silently survive on device."""
         self._map.clear()
+        self._pending.clear()
+        self._sorted = (np.empty(0, np.uint64), np.empty(0, np.uint64),
+                        np.empty(0, bool))
         self._cache = None
+        self.uid = next(_OVERLAY_UIDS)
         self.version += 1
 
     def merge_under(self, other: "DeltaOverlay") -> None:
@@ -117,7 +147,83 @@ class DeltaOverlay:
         for key, ent in other._map.items():
             self._map.setdefault(key, ent)
         self._cache = None
+        self._sorted = None    # bulk graft: one full rebuild (rare abort path)
         self.version += 1
+
+    # ------------------------------------------------------- write batching
+    @property
+    def pending_writes(self) -> int:
+        """Writes recorded since the last ``take_batch``/``mark_synced``."""
+        return len(self._pending)
+
+    def take_batch(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Drain the pending buffer as one sorted, unpadded
+        (keys, payloads, tombstones) triple — the step's O(batch) upload for
+        the device-resident overlay merge (DESIGN.md §14).
+
+        Draining also folds the batch into the incremental sorted mirror, so
+        ``arrays()`` stays consistent whichever path (device merge or host
+        reseed) consumes the writes."""
+        n = len(self._pending)
+        if n == 0:
+            return (np.empty(0, np.uint64), np.empty(0, np.uint64),
+                    np.empty(0, bool))
+        items = sorted(self._pending.items())
+        bk = np.fromiter((k for k, _ in items), dtype=np.uint64, count=n)
+        bp = np.fromiter((v[0] for _, v in items), dtype=np.uint64, count=n)
+        bt = np.fromiter((v[1] for _, v in items), dtype=bool, count=n)
+        self._pending.clear()
+        if self._sorted is None:
+            self._rebuild_sorted()       # post-merge_under: one full rebuild
+        else:
+            self._apply_sorted(bk, bp, bt)
+        return bk, bp, bt
+
+    def mark_synced(self) -> None:
+        """Discard the pending buffer after a full-state device reseed: the
+        consumer just absorbed the entire map, so the delta is moot."""
+        self.take_batch()
+
+    def _rebuild_sorted(self) -> None:
+        """Full argsort rebuild of the sorted mirror from the map (initial
+        state and the merge_under abort path; steady state is incremental)."""
+        n = len(self._map)
+        uk = np.fromiter(self._map.keys(), dtype=np.uint64, count=n)
+        up = np.fromiter((v[0] for v in self._map.values()),
+                         dtype=np.uint64, count=n)
+        ut = np.fromiter((v[1] for v in self._map.values()),
+                         dtype=bool, count=n)
+        order = np.argsort(uk)
+        self._sorted = (uk[order], up[order], ut[order])
+
+    def _apply_sorted(self, bk: np.ndarray, bp: np.ndarray, bt: np.ndarray
+                      ) -> None:
+        """Fold a sorted batch into the sorted mirror: overwrite hits in
+        place, insert misses at their searchsorted positions — O(n + batch)
+        instead of the full O(n log n) re-argsort per dirty step."""
+        sk, sp, st = self._sorted
+        if sk.size == 0:
+            self._sorted = (bk.copy(), bp.copy(), bt.copy())
+            return
+        pos = np.searchsorted(sk, bk)
+        hit = (pos < sk.size) & (sk[np.minimum(pos, sk.size - 1)] == bk)
+        if hit.any():
+            sp[pos[hit]] = bp[hit]
+            st[pos[hit]] = bt[hit]
+        if not hit.all():
+            new = ~hit
+            # np.insert with an index array interprets positions w.r.t. the
+            # ORIGINAL array — exactly what searchsorted produced
+            sk = np.insert(sk, pos[new], bk[new])
+            sp = np.insert(sp, pos[new], bp[new])
+            st = np.insert(st, pos[new], bt[new])
+        self._sorted = (sk, sp, st)
+
+    def _sync_sorted(self) -> None:
+        if self._pending:
+            self.take_batch()
+        elif self._sorted is None:
+            self._rebuild_sorted()
 
     # ---------------------------------------------------------------- reads
     def __len__(self) -> int:
@@ -160,22 +266,17 @@ class DeltaOverlay:
         < 2**64-1 (also required by the leaf pools).
         """
         if self._cache is None:
+            self._sync_sorted()
+            sk, sp, st = self._sorted
             cap = self.capacity
             keys = np.full(cap, UINT64_MAX, dtype=np.uint64)
             pays = np.zeros(cap, dtype=np.uint64)
             tomb = np.zeros(cap, dtype=bool)
-            n = len(self._map)
+            n = sk.size
             if n:
-                # dict iteration order aligns keys() with values()
-                uk = np.fromiter(self._map.keys(), dtype=np.uint64, count=n)
-                up = np.fromiter((v[0] for v in self._map.values()),
-                                 dtype=np.uint64, count=n)
-                ut = np.fromiter((v[1] for v in self._map.values()),
-                                 dtype=bool, count=n)
-                order = np.argsort(uk)
-                keys[:n] = uk[order]
-                pays[:n] = up[order]
-                tomb[:n] = ut[order]
+                keys[:n] = sk
+                pays[:n] = sp
+                tomb[:n] = st
             self._cache = {"ov_keys": keys, "ov_pay": pays, "ov_tomb": tomb}
         return self._cache
 

@@ -251,6 +251,112 @@ def overlay_arrays_merged(frozen: DeltaOverlay | None, live: DeltaOverlay
             "n_live": int(n)}
 
 
+@functools.partial(jax.jit, static_argnames=("cap_out",))
+def merge_overlay_pack_jnp(pack: jnp.ndarray, batch: jnp.ndarray,
+                           cap_out: int) -> jnp.ndarray:
+    """Device-resident sorted-merge upsert: ``pack`` (3, Ca) updated by the
+    step's sorted write ``batch`` (3, Cb), producing a (3, cap_out) pack —
+    the jnp reference semantics of the overlay-merge kernel and the engines'
+    default write path (DESIGN.md §14).
+
+    Both inputs are u64 packs in overlay layout (keys/payloads/tombstones,
+    UINT64_MAX key padding doubling as the occupancy mask) with unique sorted
+    live keys.  The batch wins on key collisions (last-writer-wins upsert)
+    and tombstones are retained as entries — exactly the dict-union semantics
+    of the host oracle, so the merged pack is bit-identical to a full host
+    repack at the same capacity.  The caller guarantees ``cap_out`` covers
+    the merged live count (it knows both host-side fill counts exactly);
+    output positions are computed by rank arithmetic, so no sort runs on
+    device: O(Ca + Cb) scatter work per merge.
+    """
+    ak, ap, at = pack[0], pack[1], pack[2]
+    bk, bp, bt = batch[0], batch[1], batch[2]
+    ca = ak.shape[0]
+    cb = bk.shape[0]
+    um = jnp.uint64(UINT64_MAX)
+    live_a = ak != um
+    live_b = bk != um
+    # overlay keys overwritten by the batch (padding resolves to live_a=False)
+    posb = jnp.searchsorted(bk, ak, side="left").astype(jnp.int32)
+    in_b = (posb < cb) & (jnp.take(bk, jnp.clip(posb, 0, cb - 1)) == ak)
+    surv_a = live_a & ~in_b
+    # rank of each surviving overlay key among survivors (exclusive cumsum)
+    surv_i = surv_a.astype(jnp.int32)
+    rank_a = jnp.cumsum(surv_i) - surv_i
+    # posb == count of live batch keys strictly below ak[i] (batch sorted,
+    # padding keys == UINT64_MAX sort above every live key)
+    pos_a = rank_a + posb
+    # rank of each live batch key among batch entries
+    live_bi = live_b.astype(jnp.int32)
+    rank_b = jnp.cumsum(live_bi) - live_bi
+    # surviving overlay keys strictly below bk[j]: all overlay keys below it
+    # minus the overwritten ones below it (= batch∩overlay keys before j)
+    posa = jnp.searchsorted(ak, bk, side="left").astype(jnp.int32)
+    in_a = (posa < ca) & (jnp.take(ak, jnp.clip(posa, 0, ca - 1)) == bk)
+    common_bi = (live_b & in_a).astype(jnp.int32)
+    dead_below = jnp.cumsum(common_bi) - common_bi
+    pos_b = rank_b + posa - dead_below
+    # disjoint scatter: survivors and batch entries interleave into one
+    # sorted run; dropped slots scatter to the (out-of-range) sentinel
+    idx_a = jnp.where(surv_a, pos_a, cap_out)
+    idx_b = jnp.where(live_b, pos_b, cap_out)
+    out_k = jnp.full((cap_out,), um, dtype=jnp.uint64)
+    out_p = jnp.zeros((cap_out,), dtype=jnp.uint64)
+    out_t = jnp.zeros((cap_out,), dtype=jnp.uint64)
+    out_k = out_k.at[idx_a].set(ak, mode="drop").at[idx_b].set(bk, mode="drop")
+    out_p = out_p.at[idx_a].set(ap, mode="drop").at[idx_b].set(bp, mode="drop")
+    out_t = out_t.at[idx_a].set(at, mode="drop").at[idx_b].set(bt, mode="drop")
+    return jnp.stack([out_k, out_p, out_t])
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def empty_overlay_pack(cap: int) -> jnp.ndarray:
+    """All-padding (3, cap) overlay pack built ON DEVICE — the zero-H2D
+    reseed after a compaction cleared the overlay."""
+    um = jnp.full((1, cap), jnp.uint64(UINT64_MAX), dtype=jnp.uint64)
+    z = jnp.zeros((2, cap), dtype=jnp.uint64)
+    return jnp.concatenate([um, z], axis=0)
+
+
+def merge_overlay_pack(ovr: dict, batch, cap_out: int,
+                       merge_fn=None) -> tuple[dict, int]:
+    """Absorb a drained host write batch (``DeltaOverlay.take_batch``) into
+    the device-resident overlay pack — the O(batch) H2D write path.
+
+    Pads the sorted batch to a power-of-two bucket (few jit shapes), ships
+    ONLY that (3, bcap) pack, and merges on device via ``merge_fn`` (default:
+    the jnp reference; the serving engines bind the Pallas kernel through
+    ``overlay_merge_backend_fn``).  Returns (new overlay dict stamped with a
+    fresh ``ov_token``, H2D bytes uploaded)."""
+    bk, bp, bt = batch
+    n = int(bk.shape[0])
+    bcap = next_pow2(max(n, 8))
+    bpack = np.zeros((3, bcap), dtype=np.uint64)
+    bpack[0] = UINT64_MAX
+    bpack[0, :n] = bk
+    bpack[1, :n] = bp
+    bpack[2, :n] = bt
+    fn = merge_fn if merge_fn is not None else merge_overlay_pack_jnp
+    pack = fn(ovr["ov_pack"], jnp.asarray(bpack), cap_out)
+    return ({"ov_pack": pack, "ov_token": new_snap_token()},
+            int(bpack.nbytes))
+
+
+def overlay_merge_backend_fn(backend: str = "auto"):
+    """The overlay-merge entry for a read backend, callable as
+    ``fn(pack, batch_pack, cap_out) -> new_pack`` — the engines' write-path
+    twin of ``lookup_backend_fns``: "jnp" merges with the reference above,
+    "fused"/"fused_interpret" route through the Pallas overlay-merge kernel
+    (interpret mode off-TPU, same degradation rule as the read path)."""
+    b = resolve_read_backend(backend)
+    if b == "jnp":
+        return merge_overlay_pack_jnp
+    from ..kernels.overlay_merge.ops import overlay_merge_pack
+    interpret = (b == "fused_interpret"
+                 or jax.default_backend() != "tpu")
+    return functools.partial(overlay_merge_pack, interpret=interpret)
+
+
 def update_leaf_rows(arrs: dict, di: DeviceIndex) -> dict:
     """Patch device copies of the leaf pools after a fast-path refresh.
 

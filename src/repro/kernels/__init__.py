@@ -20,12 +20,17 @@ TPU); the pallas_call/BlockSpec structure is the deployable artifact.
 from .leaf_search.ops import leaf_search
 from .inner_probe.ops import inner_probe_lookup
 from .overlay_probe.ops import overlay_probe
+from .overlay_merge.ops import (overlay_merge_pack,
+                                overlay_merge_pack_stacked,
+                                overlay_merge_pack_stacked_mesh)
 from .paged_attention.ops import paged_attention
 from .fused_lookup.ops import (fused_lookup_batch, fused_lookup_batch_overlay,
                                fused_lookup_batch_sharded,
                                fused_lookup_batch_sharded_overlay)
 
 __all__ = ["leaf_search", "inner_probe_lookup", "overlay_probe",
+           "overlay_merge_pack", "overlay_merge_pack_stacked",
+           "overlay_merge_pack_stacked_mesh",
            "paged_attention", "fused_lookup_batch",
            "fused_lookup_batch_overlay", "fused_lookup_batch_sharded",
            "fused_lookup_batch_sharded_overlay"]

@@ -130,14 +130,26 @@ class FusedOperands:
                 self.leaf_pack, self.meta, self.llm, self.bounds)
 
 
+@jax.jit
+def _overlay_planes_jit(pack: jnp.ndarray):
+    """(3, cap) u64 pack -> ((4, cap) u32 key/payload planes, (1, cap) i32
+    tombstones), entirely on device: overlay packs produced by the
+    device-resident merge kernel (DESIGN.md §14) are re-planed with zero
+    D2H/H2D traffic — one tiny shift/mask dispatch per fresh ov_token."""
+    kh = (pack[0] >> jnp.uint64(32)).astype(jnp.uint32)
+    kl = (pack[0] & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    ph = (pack[1] >> jnp.uint64(32)).astype(jnp.uint32)
+    plo = (pack[1] & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    return (jnp.stack([kh, kl, ph, plo]),
+            (pack[2] != 0).astype(jnp.int32).reshape(1, -1))
+
+
 class OverlayOperands:
     def __init__(self, ovr: dict):
-        pack = np.asarray(ovr["ov_pack"])
-        kh, kl = _planes(pack[0])
-        ph, plo = _planes(pack[1])
-        self.ov_u32 = jnp.asarray(np.stack([kh, kl, ph, plo]))
-        self.ov_tomb = jnp.asarray(
-            (pack[2] != 0).astype(np.int32).reshape(1, -1))
+        pack = ovr["ov_pack"]
+        if not isinstance(pack, jnp.ndarray):
+            pack = jnp.asarray(np.asarray(pack, dtype=np.uint64))
+        self.ov_u32, self.ov_tomb = _overlay_planes_jit(pack)
         self.cap = int(pack.shape[1])
 
 

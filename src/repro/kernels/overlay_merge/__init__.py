@@ -1,0 +1,5 @@
+from .ops import (overlay_merge_pack, overlay_merge_pack_stacked,
+                  overlay_merge_pack_stacked_mesh)
+
+__all__ = ["overlay_merge_pack", "overlay_merge_pack_stacked",
+           "overlay_merge_pack_stacked_mesh"]

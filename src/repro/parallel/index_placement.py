@@ -32,7 +32,7 @@ from .sharding import INDEX_RULES, index_mesh, spec_for
 
 __all__ = ["MESH_AXIS", "REPLICATED_FIELDS", "index_mesh",
            "mesh_num_devices", "stacked_spec", "stacked_sharding",
-           "place_stacked"]
+           "place_stacked", "place_overlay_pack"]
 
 MESH_AXIS = "shards"
 
@@ -73,4 +73,17 @@ def place_stacked(stk: dict, mesh: Mesh) -> dict:
                                                            mesh))
         else:
             out[name] = v
+    return out
+
+
+def place_overlay_pack(ovr: dict, mesh: Mesh) -> dict:
+    """Commit a merged overlay pack dict to replicated mesh placement.
+
+    Seeding the pack replicated once (at the host-reseed boundary of the
+    write path, DESIGN.md §14) means every later device-side delta merge —
+    replicated pack ⊕ replicated batch — produces a replicated result by
+    propagation, so serving dispatches never re-broadcast the pack."""
+    out = dict(ovr)
+    out["ov_pack"] = jax.device_put(ovr["ov_pack"],
+                                    NamedSharding(mesh, PartitionSpec()))
     return out

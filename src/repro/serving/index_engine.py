@@ -111,6 +111,16 @@ class IndexShard:
     compactions: int = 0
     frozen_overlay: Optional[DeltaOverlay] = None
     pending: list = dataclasses.field(default_factory=list)
+    # device-resident write path (DESIGN.md §14): the merge backend bound by
+    # the engine (None = always reseed from host, the old full-repack path),
+    # the (live uid, frozen uid) structure the current pack was seeded
+    # against, and the write-path cost counters the benchmarks report
+    ov_merge_fn: Optional[object] = None
+    ov_struct: Optional[tuple] = None
+    write_h2d_bytes: int = 0
+    write_host_s: float = 0.0
+    overlay_merges: int = 0
+    overlay_reseeds: int = 0
 
     @classmethod
     def wrap(cls, idx: Aulid, gamma: float,
@@ -123,6 +133,7 @@ class IndexShard:
             from ..core.lookup import device_arrays, overlay_arrays
             sh.arrs = device_arrays(di)
             sh.ov_arrs = overlay_arrays(overlay)
+            sh.ov_struct = (overlay.uid, 0)   # pack seeded (empty, synced)
         return sh
 
     # ---------------------------------------------------------------- writes
@@ -237,12 +248,50 @@ class IndexShard:
         self.compactions += 1
 
     def refresh_overlay_arrays(self) -> None:
+        """Sync the device overlay pack with this step's writes
+        (DESIGN.md §14).
+
+        Delta path (steady state): the device pack is the source of truth
+        between compactions — drain the live overlay's pending writes, ship
+        only that sorted batch (O(batch) H2D), and fold it in on device via
+        the bound overlay-merge backend.  The path is valid exactly while
+        the (live uid, frozen uid) structure beneath the pack is unchanged:
+        a freeze merely relabels content the pack already merges (the
+        frozen∪live view is invariant under the relabeling), and batch
+        writes stay newest, so last-writer-wins keeps the pack exact.
+
+        Reseed path (ownership handoff back to the host dicts): any uid
+        change — freeze, finish_swap, abort_swap, or a clear() (which takes
+        a fresh uid) — rebuilds the pack from the host state, and
+        ``mark_synced`` discards the now-moot pending deltas."""
+        t0 = time.perf_counter()
+        struct = (self.overlay.uid,
+                  self.frozen_overlay.uid if self.frozen_overlay else 0)
+        if (self.ov_merge_fn is not None and self.ov_arrs is not None
+                and struct == self.ov_struct):
+            from ..core.lookup import merge_overlay_pack
+            batch = self.overlay.take_batch()
+            if batch[0].size:
+                cap_out = max(int(self.ov_arrs["ov_pack"].shape[1]),
+                              next_pow2(self.overlay_live()))
+                self.ov_arrs, nbytes = merge_overlay_pack(
+                    self.ov_arrs, batch, cap_out, merge_fn=self.ov_merge_fn)
+                self.write_h2d_bytes += nbytes
+                self.overlay_merges += 1
+            self.write_host_s += time.perf_counter() - t0
+            return
         from ..core.lookup import overlay_arrays, overlay_arrays_merged
+        self.overlay.mark_synced()
         if self.frozen_overlay is not None:
+            self.frozen_overlay.mark_synced()
             self.ov_arrs = overlay_arrays_merged(self.frozen_overlay,
                                                  self.overlay)
         else:
             self.ov_arrs = overlay_arrays(self.overlay)
+        self.ov_struct = struct
+        self.overlay_reseeds += 1
+        self.write_h2d_bytes += int(self.ov_arrs["ov_pack"].nbytes)
+        self.write_host_s += time.perf_counter() - t0
 
     def overlay_live(self) -> int:
         """Upper bound on live served-overlay entries (scan ``ov_bound``):
@@ -447,11 +496,12 @@ class IndexEngine(BaseIndexEngine):
 
     def __init__(self, idx: Aulid, *, gamma: float = 0.05,
                  auto_compact: bool = True, backend: str = "auto",
-                 async_compact: bool = False):
+                 async_compact: bool = False, overlay_merge: bool = True):
         # imported lazily-adjacent (module import enables jax x64 — keep the
         # engine importable before the host index is even built)
-        from ..core.lookup import (lookup_backend_fns, resolve_read_backend,
-                                   scan_batch_overlay)
+        from ..core.lookup import (lookup_backend_fns,
+                                   overlay_merge_backend_fn,
+                                   resolve_read_backend, scan_batch_overlay)
         super().__init__()
         # point lookups dispatch by backend (jnp gathers vs fused Pallas
         # kernel — DESIGN.md §10); scans always run the jnp path
@@ -465,6 +515,12 @@ class IndexEngine(BaseIndexEngine):
         self.failed_swaps = 0
         self._inflight = None
         self.shard = IndexShard.wrap(idx, gamma)
+        # device-resident write path (DESIGN.md §14): per-step writes merge
+        # into the device pack as O(batch) deltas; False keeps the old
+        # full-repack path (the write-path benchmark baseline)
+        self.overlay_merge = bool(overlay_merge)
+        if overlay_merge:
+            self.shard.ov_merge_fn = overlay_merge_backend_fn(backend)
 
     # ------------------------------------------- shard-state delegation
     @property
@@ -584,4 +640,8 @@ class IndexEngine(BaseIndexEngine):
             "inflight": int(self._inflight is not None),
             "mirror_refreshes": self.di.refreshes,
             "mirror_full_builds": self.di.full_builds,
+            "overlay_merges": self.shard.overlay_merges,
+            "overlay_reseeds": self.shard.overlay_reseeds,
+            "write_h2d_bytes": self.shard.write_h2d_bytes,
+            "write_host_s": self.shard.write_host_s,
         }

@@ -52,6 +52,7 @@ the leading axis always divides the mesh; request semantics are unchanged
 from __future__ import annotations
 
 import functools
+import time
 
 import numpy as np
 
@@ -73,9 +74,11 @@ class ShardedIndexEngine(BaseIndexEngine):
                  auto_compact: bool = True, backend: str = "auto",
                  async_compact: bool = True, repartition: bool = False,
                  split_ratio: float = 4.0, min_split_items: int = 128,
-                 repartition_check_every: int = 1, mesh=None):
+                 repartition_check_every: int = 1, mesh=None,
+                 overlay_merge: bool = True):
         from ..core.lookup import (lookup_backend_fns,
                                    mesh_lookup_backend_fns,
+                                   overlay_merge_backend_fn,
                                    resolve_read_backend,
                                    scan_batch_sharded_overlay,
                                    stacked_device_arrays,
@@ -139,6 +142,21 @@ class ShardedIndexEngine(BaseIndexEngine):
         self._pack_sig: tuple | None = None
         self._pack_live = 0
         self.pack_skips = 0
+        # device-resident write path (DESIGN.md §14): while every shard's
+        # (live uid, frozen uid) structure is unchanged, per-step writes ship
+        # as ONE concatenated sorted batch (shard ranges are disjoint and
+        # ordered, so shard-order concatenation is globally sorted) and merge
+        # into the pack on device; False keeps the full-rebuild path (the
+        # write-path benchmark baseline)
+        self.overlay_merge = bool(overlay_merge)
+        self._ov_merge = (overlay_merge_backend_fn(backend)
+                          if overlay_merge else None)
+        self._pack_struct: tuple | None = None
+        self.write_h2d_bytes = 0
+        self.write_host_s = 0.0
+        self.overlay_merges = 0
+        self.overlay_reseeds = 0
+        self.ov_arrs = None
         self.ov_arrs = self._merged_overlay_pack()
         self.restacks = 0                     # full re-stacks (shard outgrew pad)
         self.swaps = 0                        # double-buffered epoch swaps
@@ -538,6 +556,7 @@ class ShardedIndexEngine(BaseIndexEngine):
         self._write_counts = [0] * len(self.shards)
         self._seg_cache.clear()
         self._pack_sig = None
+        self._pack_struct = None    # shard list changed: next pack reseeds
 
     def _split_sync(self, s: int, split_key: int) -> None:
         """Inline split (sync mode): overlays are already folded into the
@@ -561,6 +580,7 @@ class ShardedIndexEngine(BaseIndexEngine):
         self._write_counts = [0] * len(self.shards)
         self._seg_cache.clear()
         self._pack_sig = None
+        self._pack_struct = None
         self._full_restack()
         self.ov_arrs = self._merged_overlay_pack()
 
@@ -584,11 +604,27 @@ class ShardedIndexEngine(BaseIndexEngine):
         Rebuilds are memoized on the overlay signature: untouched shards
         reuse their cached merged segment, and a step that changed nothing
         reuses the whole pack — at high shard counts this rebuild is the
-        dominant per-step host cost, and most steps touch few shards."""
+        dominant per-step host cost, and most steps touch few shards.
+
+        Delta path (DESIGN.md §14): while every shard's (live uid, frozen
+        uid) structure matches what the current pack was seeded against,
+        only versions have advanced — i.e. plain writes — so the pack
+        absorbs the shards' drained pending batches as ONE device merge of
+        O(batch) uploaded bytes instead of this full O(total) rebuild.  Any
+        uid change (freeze, swap, clear, repartition) falls through to the
+        rebuild, which re-seeds the pack from host state and marks every
+        overlay synced."""
         sig = self._overlay_sig()
         if sig == self._pack_sig and self.ov_arrs is not None:
             self.pack_skips += 1
             return self.ov_arrs
+        t0 = time.perf_counter()
+        struct = tuple((s[0], s[2]) for s in sig)
+        if (self._ov_merge is not None and self.ov_arrs is not None
+                and struct == self._pack_struct):
+            out = self._delta_merge_pack(sig, t0)
+            if out is not None:
+                return out
         import jax.numpy as jnp
         from ..core.lookup import new_snap_token
         segs = []
@@ -615,7 +651,50 @@ class ShardedIndexEngine(BaseIndexEngine):
                 off += n
         self._pack_sig = sig
         self._pack_live = total
-        return {"ov_pack": jnp.asarray(pack), "ov_token": new_snap_token()}
+        # reseed boundary: the pack now reflects full host state, so the
+        # shards' pending deltas are moot and the structure token advances
+        for sh in self.shards:
+            sh.overlay.mark_synced()
+            if sh.frozen_overlay is not None:
+                sh.frozen_overlay.mark_synced()
+        self._pack_struct = struct
+        self.overlay_reseeds += 1
+        self.write_h2d_bytes += int(pack.nbytes)
+        ovr = {"ov_pack": jnp.asarray(pack), "ov_token": new_snap_token()}
+        if self.mesh is not None:
+            # committed replication: later device-side delta merges inherit
+            # the replicated sharding instead of re-broadcasting per dispatch
+            from ..parallel.index_placement import place_overlay_pack
+            ovr = place_overlay_pack(ovr, self.mesh)
+        self.write_host_s += time.perf_counter() - t0
+        return ovr
+
+    def _delta_merge_pack(self, sig: tuple, t0: float) -> dict | None:
+        """O(batch) write-path sync: drain every shard's pending writes, ship
+        the one concatenated sorted batch, merge on device.  Returns None
+        when there is nothing to merge (a version bump without pending
+        writes — e.g. an external ``arrays()`` drain), falling back to the
+        full rebuild."""
+        from ..core.lookup import merge_overlay_pack
+        batches = [sh.overlay.take_batch() for sh in self.shards]
+        bk = np.concatenate([b[0] for b in batches])
+        if bk.size == 0:
+            return None
+        bp = np.concatenate([b[1] for b in batches])
+        bt = np.concatenate([b[2] for b in batches])
+        # upper bound on merged pack fill (scan ov_bound); exact counts live
+        # in the host dicts, so cap growth is known without a device sync
+        bound = sum(sh.overlay_live() for sh in self.shards)
+        cap_out = max(int(self.ov_arrs["ov_pack"].shape[1]),
+                      self._ov_floor, next_pow2(bound))
+        ovr, nbytes = merge_overlay_pack(self.ov_arrs, (bk, bp, bt), cap_out,
+                                         merge_fn=self._ov_merge)
+        self._pack_sig = sig
+        self._pack_live = bound
+        self.write_h2d_bytes += nbytes
+        self.overlay_merges += 1
+        self.write_host_s += time.perf_counter() - t0
+        return ovr
 
     # ------------------------------------------------------------- read path
     # Without a mesh, qcap stays at its always-safe default (the padded
@@ -707,8 +786,9 @@ class ShardedIndexEngine(BaseIndexEngine):
         return max(self.sdi.max_inner_height, 3)
 
     def _overlay_live(self) -> int:
-        # tracked pack occupancy: the pack was (re)built or reused this step,
-        # so its recorded fill IS the served frozen+live entry count
+        # tracked pack occupancy: on rebuild the recorded fill IS the served
+        # frozen+live entry count; on a delta merge it is the host dicts'
+        # upper bound on it (always >= the pack's true fill — safe ov_bound)
         return self._pack_live
 
     # ----------------------------------------------------------------- stats
@@ -729,6 +809,10 @@ class ShardedIndexEngine(BaseIndexEngine):
             "failed_swaps": self.failed_swaps,
             "inflight": len(self._inflight),
             "pack_skips": self.pack_skips,
+            "overlay_merges": self.overlay_merges,
+            "overlay_reseeds": self.overlay_reseeds,
+            "write_h2d_bytes": self.write_h2d_bytes,
+            "write_host_s": self.write_host_s,
             "splits": self.splits,
             "merges": self.merges,
             "repart_failures": self.repart_failures,

@@ -20,6 +20,11 @@ Scenarios:
   mid-stream (hand-pumped build pool), vs a frozen-partition oracle.
 * ``fused`` — the fused Pallas kernel (interpret mode) per-device-local
   under shard_map vs the jnp oracle, engine-level.
+* ``wmerge`` — write-path delta merge (DESIGN.md §14): the mesh engine
+  merging write batches on device answers a write-heavy stream
+  request-for-request like the full-repack single-device oracle, and the
+  ``shard_map`` stacked overlay-merge kernel is bit-identical to its
+  single-device twin.
 """
 import sys
 
@@ -208,8 +213,61 @@ def scenario_fused(D):
     print(f"OK fused D={D}")
 
 
+def scenario_wmerge(D):
+    import jax.numpy as jnp
+
+    from repro.kernels.overlay_merge import (overlay_merge_pack_stacked,
+                                             overlay_merge_pack_stacked_mesh)
+    keys, pay = _dataset()
+    base = _mk(keys, pay, overlay_merge=False)
+    meng = _mk(keys, pay, mesh=index_mesh(D))
+    rng = np.random.default_rng(17)
+    for step in range(4):
+        pairs = []
+        for i in range(24):
+            k = (int(rng.integers(0, 2**50)) if rng.random() < 0.7
+                 else int(rng.choice(keys)))
+            pairs.append((base.insert(k, step * 100 + i),
+                          meng.insert(k, step * 100 + i)))
+        for i in range(6):
+            k = int(rng.choice(keys))
+            pairs.append((base.delete(k), meng.delete(k)))
+        for i in range(16):
+            k = (int(rng.choice(keys)) if rng.random() < 0.5
+                 else int(rng.integers(0, 2**50)))
+            pairs.append((base.get(k), meng.get(k)))
+        base.step()
+        meng.step()
+        _check_pairs(pairs)
+    assert meng.stats()["overlay_merges"] > 0, meng.stats()
+
+    # stacked kernel parity under shard_map: each device merges only its
+    # own shard rows; result must match the single-device stacked call
+    def rand_pack(cap, n):
+        ks = np.sort(np.unique(
+            rng.integers(0, 2**50, 4 * n).astype(np.uint64))[:n])
+        pack = np.zeros((3, cap), dtype=np.uint64)
+        pack[0] = np.uint64(2**64 - 1)
+        m = ks.size
+        pack[0, :m] = ks
+        pack[1, :m] = rng.integers(0, 2**40, m).astype(np.uint64)
+        pack[2, :m] = (rng.random(m) < 0.2).astype(np.uint64)
+        return pack
+
+    packs = np.stack([rand_pack(32, 24) for _ in range(D)])
+    batches = np.stack([rand_pack(8, 6) for _ in range(D)])
+    got = overlay_merge_pack_stacked_mesh(meng.mesh, packs, batches, 64,
+                                          interpret=True)
+    want = overlay_merge_pack_stacked(jnp.asarray(packs),
+                                      jnp.asarray(batches), 64,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    print(f"OK wmerge D={D}")
+
+
 SCENARIOS = {"func": scenario_func, "mixed": scenario_mixed,
-             "split": scenario_split, "fused": scenario_fused}
+             "split": scenario_split, "fused": scenario_fused,
+             "wmerge": scenario_wmerge}
 
 
 def main(argv):
